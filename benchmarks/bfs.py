@@ -1,0 +1,38 @@
+"""BFS benchmark — paper Fig. 10b (CAS vs SWP vs FAA on Kronecker graphs).
+
+Reports traversed edges per second per combiner.  The paper's conclusion —
+primitives cost the same, semantics decide — shows up as nearly identical
+TEPS for CAS/SWP with FAA paying for its revert scheme.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from benchmarks.common import Csv, time_s
+from repro.core.bfs import bfs, kronecker_graph, validate_parents
+
+SCALE = 12
+EDGEFACTOR = 8
+
+
+def run(csv: Csv, scale: int = SCALE) -> Dict[str, float]:
+    src, dst = kronecker_graph(scale=scale, edgefactor=EDGEFACTOR, seed=0)
+    n = 1 << scale
+    s2 = np.concatenate([src, dst])
+    d2 = np.concatenate([dst, src])
+    root = int(s2[0])
+    out: Dict[str, float] = {}
+    for op in ("cas", "swp", "faa"):
+        r = bfs(s2, d2, n, root=root, op=op)      # warm + correctness
+        assert validate_parents(s2, d2, np.asarray(r.parent), root), op
+        t = time_s(lambda op=op: bfs(s2, d2, n, root=root, op=op).parent,
+                   reps=3, warmup=1)
+        teps = r.edges_traversed / t
+        out[op] = teps
+        csv.add(f"bfs.{op}.scale{scale}", t * 1e6,
+                f"TEPS={teps:.3g} levels={r.levels} "
+                f"edges={r.edges_traversed}")
+    return out

@@ -1,0 +1,45 @@
+"""Shared benchmark machinery (paper §2.1 methodology on this host).
+
+Phases per benchmark: preparation (allocate + warm: the jit compile also
+plays the TLB-warm role), synchronization (block_until_ready), measurement
+(perf_counter_ns around the blocked call), result collection (median of k).
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, List
+
+import jax
+import numpy as np
+
+WARMUP = 2
+REPS = 5
+
+
+def time_s(fn: Callable[[], object], reps: int = REPS,
+           warmup: int = WARMUP) -> float:
+    """Median wall seconds of fn() (each call fully blocked)."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn())
+    out: List[float] = []
+    for _ in range(reps):
+        t0 = time.perf_counter_ns()
+        jax.block_until_ready(fn())
+        out.append((time.perf_counter_ns() - t0) / 1e9)
+    return float(np.median(out))
+
+
+class Csv:
+    """Collects `name,us_per_call,derived` rows (benchmarks/run.py format)."""
+
+    def __init__(self):
+        self.rows: List[Dict] = []
+
+    def add(self, name: str, us_per_call: float, derived: str = "") -> None:
+        self.rows.append({"name": name, "us_per_call": us_per_call,
+                          "derived": derived})
+        print(f"{name},{us_per_call:.4g},{derived}", flush=True)
+
+    def header(self) -> None:
+        print("name,us_per_call,derived", flush=True)

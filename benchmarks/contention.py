@@ -1,0 +1,56 @@
+"""Contention benchmark — paper Fig. 8a-c (n writers -> one cache line).
+
+The host analogue of thread count is *collision density*: a batch whose
+indices all target one table slot (fully contended) versus spread uniformly
+(uncontended).  Serialized execution collapses under contention exactly like
+the paper's hardware; the combining mode (reduction tree) absorbs it — the
+§6.2 fix, and the mechanism the MoE dispatch planner prices.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Csv, time_s
+from repro.core import contention as cmodel
+from repro.core.perf_model import TPU_V5E
+from repro.core.rmw import rmw_combining, rmw_serialized
+
+TABLE = 65_536
+N_OPS = 262_144
+WRITERS = (1, 2, 4, 8, 16, 61)
+
+
+def run(csv: Csv) -> Dict[str, List]:
+    rng = np.random.default_rng(2)
+    table = jnp.zeros((TABLE,), jnp.float32)
+    vals = jnp.asarray(rng.normal(size=N_OPS), jnp.float32)
+    out = {"writers": list(WRITERS), "combining_Bps": [],
+           "modeled_serialized_Bps": [], "modeled_combining_Bps": []}
+    for w in WRITERS:
+        # w writers hammering one slot each within a w-slot window — the
+        # collision density of w contending threads
+        idx = jnp.asarray(rng.integers(0, w, N_OPS), jnp.int32)
+        t = time_s(jax.jit(lambda t=table, i=idx:
+                           rmw_combining(t, i, vals, "faa").table)) / N_OPS
+        bw = 4 / t
+        out["combining_Bps"].append(bw)
+        m_ser = cmodel.contended_bandwidth_serialized(TPU_V5E, "faa", w)
+        m_comb = cmodel.contended_bandwidth_combining(TPU_V5E, "faa", w)
+        out["modeled_serialized_Bps"].append(m_ser)
+        out["modeled_combining_Bps"].append(m_comb)
+        csv.add(f"contention.faa.w{w}", t * 1e6,
+                f"measured={bw/1e6:.1f}MB/s modelTPU ser={m_ser/1e6:.1f} "
+                f"comb={m_comb/1e6:.1f}MB/s")
+
+    # serialized contended (small batch — it is slow by construction)
+    idx1 = jnp.zeros((2048,), jnp.int32)
+    t = time_s(jax.jit(lambda t=table: rmw_serialized(
+        t, idx1, vals[:2048], "faa").table)) / 2048
+    csv.add("contention.faa.serialized_hot", t * 1e6,
+            f"{4/t/1e6:.2f} MB/s (paper regime)")
+    return out

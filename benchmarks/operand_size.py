@@ -1,0 +1,59 @@
+"""Operand-size benchmark — paper Fig. 7 (64- vs 128-bit CAS).
+
+Sweeps the RMW operand width; the paper found AMD slower on wide operands
+(~5-20ns) while Intel was flat.  x64 dtypes are unavailable in this jax
+build's default config, so wide operands are emulated the way the paper's
+cmpxchg16b works: one op touching two adjacent lanes (2x int32 / 2x float32).
+Model prediction for the TPU target is flat per-lane (VREG lanes are width-
+agnostic until the tile splits — see unaligned.py).
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Csv, time_s
+from repro.core.perf_model import TPU_V5E, bandwidth
+from repro.core.placement import PlacementState, Tier
+from repro.core.rmw import rmw_serialized
+
+N_OPS = 2_048
+TABLE = 65_536
+
+
+def _measure(dtype, width: int) -> float:
+    rng = np.random.default_rng(3)
+    table = jnp.zeros((TABLE,), dtype)
+    idx0 = jnp.asarray(rng.integers(0, TABLE // width, N_OPS), jnp.int32) \
+        * width
+    vals = jnp.asarray(rng.integers(1, 100, N_OPS)).astype(dtype)
+    exp = jnp.zeros((N_OPS,), dtype)
+
+    def run_once(t=table):
+        r = rmw_serialized(t, idx0, vals, "cas", exp)
+        for w in range(1, width):       # adjacent lanes of the wide operand
+            r = rmw_serialized(r.table, idx0 + w, vals, "cas", exp)
+        return r.table
+
+    return time_s(jax.jit(run_once)) / N_OPS
+
+
+def run(csv: Csv) -> Dict[str, float]:
+    out: Dict[str, float] = {}
+    for name, dtype, width, nbytes in (
+            ("int32", jnp.int32, 1, 4),
+            ("float32", jnp.float32, 1, 4),
+            ("int64_pair", jnp.int32, 2, 8),
+            ("int128_quad", jnp.int32, 4, 16)):
+        t = _measure(dtype, width)
+        out[name] = t
+        model_bw = bandwidth(TPU_V5E, "cas",
+                             PlacementState(tier=Tier.HBM_LOCAL),
+                             operand_bytes=nbytes)
+        csv.add(f"operand_size.cas.{name}", t * 1e6,
+                f"{nbytes}B/op modelTPU bw={model_bw/1e9:.2f}GB/s")
+    return out

@@ -1,0 +1,44 @@
+"""DMA-pipelining benchmark — paper Fig. 9 (prefetchers & friends) analogue.
+
+The paper toggles the Hardware Prefetcher / Adjacent Cache Line Prefetcher
+and measures FAA bandwidth.  The TPU analogue of "prefetching the adjacent
+line" is the Pallas grid streaming the next index/value block HBM->VMEM
+while the current one combines: we sweep the kernel's block size (bigger
+block = deeper effective pipeline, fewer grid stalls) and the table tile
+(the cache-line-role buffer) and report the measured combining bandwidth —
+plus the sequential-vs-random access pattern split (the paper's stream
+detector prefetcher).
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Csv, time_s
+from repro.kernels.rmw.ops import rmw_apply
+
+N_OPS = 32_768
+TABLE = 8_192   # small grid: the interpret-mode kernel executes per cell
+
+
+def run(csv: Csv) -> Dict[str, float]:
+    rng = np.random.default_rng(9)
+    table = jnp.zeros((TABLE,), jnp.float32)
+    vals = jnp.asarray(rng.normal(size=N_OPS), jnp.float32)
+    idx_rand = jnp.asarray(rng.integers(0, TABLE, N_OPS), jnp.int32)
+    idx_seq = jnp.asarray(np.arange(N_OPS) % TABLE, jnp.int32)
+    out: Dict[str, float] = {}
+    for pattern, idx in (("random", idx_rand), ("sequential", idx_seq)):
+        for block in (512, 2048, 8192):
+            t = time_s(jax.jit(lambda i=idx, b=block: rmw_apply(
+                table, i, vals, "faa", table_tile=512, block=b)),
+                reps=3, warmup=1) / N_OPS
+            bw = 4 / t
+            out[f"{pattern}.b{block}"] = bw
+            csv.add(f"prefetch.faa.{pattern}.block{block}", t * 1e6,
+                    f"{bw/1e6:.1f} MB/s (deeper block = deeper DMA pipeline)")
+    return out

@@ -1,0 +1,68 @@
+"""Render EXPERIMENTS.md tables from dry-run JSON artifacts.
+
+    PYTHONPATH=src python -m benchmarks.render_experiments [--tag baseline]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+from benchmarks.roofline import (HBM_BW, LINK_BW, PEAK_FLOPS, load_cells,
+                                 roofline_row)
+
+
+def fmt_bytes(b):
+    return f"{b/1e9:.2f}"
+
+
+def dryrun_table(cells, mesh):
+    print(f"\n### Dry-run ({mesh} mesh)\n")
+    print("| arch | shape | mb | compile s | peak GB/chip | fits 16G | "
+          "wire GB | dot TFLOP/chip |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in cells:
+        if r["mesh"] != mesh:
+            continue
+        peak = r.get("per_device_peak_bytes", 0)
+        print(f"| {r['arch']} | {r['shape']} | {r.get('microbatches','-')} "
+              f"| {r.get('compile_s','-')} | {peak/1e9:.1f} "
+              f"| {'Y' if peak <= 16e9 else 'N'} "
+              f"| {r.get('total_wire_bytes',0)/1e9:.2f} "
+              f"| {r.get('dot_flops',0)/1e12:.2f} |")
+
+
+def roofline_table(cells, mesh):
+    print(f"\n### Roofline ({mesh} mesh; v5e: {PEAK_FLOPS/1e12:.0f} TF/s, "
+          f"{HBM_BW/1e9:.0f} GB/s HBM, {LINK_BW/1e9:.0f} GB/s/link)\n")
+    print("| arch | shape | t_comp ms | t_mem ms | t_coll ms | dominant | "
+          "useful | roofline frac |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in cells:
+        if r["mesh"] != mesh:
+            continue
+        row = roofline_row(r)
+        if not row:
+            continue
+        print(f"| {row['arch']} | {row['shape']} "
+              f"| {row['t_compute_s']*1e3:.1f} | {row['t_memory_s']*1e3:.1f} "
+              f"| {row['t_collective_s']*1e3:.1f} | {row['dominant']} "
+              f"| {row['useful_compute_ratio']:.2f} "
+              f"| {row['roofline_fraction']:.3f} |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="single")
+    args = ap.parse_args()
+    cells = load_cells(args.dir, args.tag)
+    dryrun_table(cells, args.mesh)
+    roofline_table(cells, args.mesh)
+    if args.mesh == "single":
+        dryrun_table(cells, "multi")
+
+
+if __name__ == "__main__":
+    main()

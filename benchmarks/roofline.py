@@ -1,0 +1,90 @@
+"""Roofline analysis from the dry-run artifacts (§Roofline deliverable).
+
+Per (arch x shape x mesh) cell:
+  compute term    = dot_flops / peak_FLOP/s          (per chip; HLO-expanded)
+  memory term     = hbm_traffic / HBM_bw             (2x result-bytes proxy)
+  collective term = wire_bytes / link_bw
+Dominant term = the bottleneck; plus MODEL_FLOPS / HLO_FLOPS (useful-compute
+ratio) and the roofline fraction = model-flops-time / dominant-term-time.
+
+Hardware constants (v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def load_cells(dryrun_dir: str = "experiments/dryrun",
+               tag: str = "baseline") -> List[Dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(dryrun_dir,
+                                              f"*.{tag}.json"))):
+        r = json.load(open(path))
+        if r.get("status") == "ok":
+            cells.append(r)
+    return cells
+
+
+def roofline_row(rec: Dict) -> Optional[Dict]:
+    if "dot_flops" not in rec:
+        return None
+    chips = rec["chips"]
+    flops = rec["dot_flops"]                      # per chip, loop-expanded
+    # HBM traffic proxy: bytes touched by matmuls (lhs+rhs+out, expanded) —
+    # fused elementwise rides along with these; `result_bytes` (recorded)
+    # is the nothing-fused upper bound
+    hbm = rec.get("dot_bytes", 0) or 2.0 * rec.get("result_bytes", 0)
+    wire = rec.get("total_wire_bytes", 0.0)
+    t_compute = flops / PEAK_FLOPS
+    t_memory = hbm / HBM_BW
+    t_coll = wire / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    model_flops = rec.get("model_flops_global", 0.0) / chips
+    useful = model_flops / flops if flops else 0.0
+    t_model = model_flops / PEAK_FLOPS
+    frac = t_model / max(terms[dominant], 1e-30)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": chips,
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops_per_chip": model_flops,
+        "hlo_flops_per_chip": flops,
+        "useful_compute_ratio": useful,
+        "roofline_fraction": frac,
+        "peak_gb": rec.get("per_device_peak_bytes", 0) / 1e9,
+        "fits_16g": rec.get("per_device_peak_bytes", 1 << 62) <= 16e9,
+    }
+
+
+def table(dryrun_dir: str = "experiments/dryrun", tag: str = "baseline",
+          mesh: str = "single") -> List[Dict]:
+    rows = []
+    for rec in load_cells(dryrun_dir, tag):
+        if rec["mesh"] != mesh:
+            continue
+        row = roofline_row(rec)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def run(csv, dryrun_dir: str = "experiments/dryrun") -> List[Dict]:
+    rows = table(dryrun_dir)
+    for r in rows:
+        dom_t = r[f"t_{r['dominant']}_s"]
+        csv.add(f"roofline.{r['arch']}.{r['shape']}", dom_t * 1e6,
+                f"dom={r['dominant']} frac={r['roofline_fraction']:.3f} "
+                f"useful={r['useful_compute_ratio']:.2f} "
+                f"peak={r['peak_gb']:.1f}GB")
+    return rows

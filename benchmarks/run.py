@@ -1,0 +1,71 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.Csv).
+
+  latency           Fig 2/3/4/6 + Figs 11-13   (per-op latency by tier)
+  bandwidth         Fig 5 / Fig 15             (ILP gap: serialized vs comb.)
+  contention        Fig 8a-c                   (n writers -> one slot)
+  operand_size      Fig 7                      (wide-operand CAS)
+  operands_fetched  Fig 8d / §5.5              (two-operand CAS)
+  unaligned         Fig 10a / Fig 14           (tile-spanning combine)
+  bfs               Fig 10b / §6.1             (CAS vs SWP vs FAA TEPS)
+  model_validation  Tables 2-3 + §5 NRMSE gate (calibration + validation)
+  roofline          §Roofline deliverable      (from dry-run artifacts)
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated benchmark names")
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller problem sizes (CI)")
+    args = ap.parse_args()
+
+    from benchmarks import (bandwidth, bfs, contention, latency,
+                            model_validation, operand_size, operands_fetched,
+                            prefetcher, roofline, unaligned)
+    from benchmarks.common import Csv
+
+    suite = {
+        "latency": lambda c: latency.run(c, n_ops=512 if args.fast else 2048),
+        "bandwidth": bandwidth.run,
+        "contention": contention.run,
+        "operand_size": operand_size.run,
+        "operands_fetched": operands_fetched.run,
+        "unaligned": unaligned.run,
+        "prefetcher": prefetcher.run,
+        "bfs": lambda c: bfs.run(c, scale=10 if args.fast else 12),
+        "model_validation": model_validation.run,
+        "roofline": roofline.run,
+    }
+    only = set(args.only.split(",")) if args.only else None
+
+    csv = Csv()
+    csv.header()
+    failures = []
+    measured_latency = None
+    for name, fn in suite.items():
+        if only and name not in only:
+            continue
+        try:
+            if name == "latency":
+                measured_latency = fn(csv)
+            elif name == "model_validation" and measured_latency is not None:
+                fn(csv, measured_latency)
+            else:
+                fn(csv)
+        except Exception as e:  # noqa: BLE001
+            failures.append((name, repr(e)))
+            print(f"{name},FAILED,{e!r}", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

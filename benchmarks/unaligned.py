@@ -1,0 +1,45 @@
+"""Unaligned/tile-spanning RMW — paper §5.7 / Fig. 10a / Fig. 14.
+
+The paper: an atomic spanning two cache lines locks the bus (CAS up to
+~750ns, vs <=20% loss for plain reads).  TPU analogue: a combine whose table
+tile is off the 128-lane grid touches two tiles per op.  We measure the
+Pallas combining kernel with aligned (128-multiple) vs misaligned tile sizes
+and report the model's 2x-acquisition prediction (perf_model.unaligned_latency).
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Csv, time_s
+from repro.core.perf_model import TPU_V5E, latency, unaligned_latency
+from repro.core.placement import PlacementState, Tier
+from repro.kernels.rmw.ops import rmw_apply
+
+N_OPS = 65_536
+TABLE = 16_384
+
+
+def run(csv: Csv) -> Dict[str, float]:
+    rng = np.random.default_rng(5)
+    table = jnp.zeros((TABLE,), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, TABLE, N_OPS), jnp.int32)
+    vals = jnp.asarray(rng.normal(size=N_OPS), jnp.float32)
+    out: Dict[str, float] = {}
+    for name, tile in (("aligned_512", 512), ("misaligned_384", 384),
+                       ("misaligned_96", 96)):
+        t = time_s(jax.jit(lambda tile=tile: rmw_apply(
+            table, idx, vals, "faa", table_tile=tile, block=1024))) / N_OPS
+        out[name] = t
+        csv.add(f"unaligned.faa.{name}", t * 1e6, f"tile={tile}")
+    st = PlacementState(tier=Tier.HBM_LOCAL)
+    m_al = latency(TPU_V5E, "cas", st)
+    m_un = unaligned_latency(TPU_V5E, "cas", st)
+    csv.add("unaligned.model.cas", m_un * 1e6 * 1e-0,
+            f"aligned={m_al*1e9:.0f}ns spanning={m_un*1e9:.0f}ns "
+            f"({m_un/m_al:.1f}x; paper saw up to ~750ns)")
+    return out

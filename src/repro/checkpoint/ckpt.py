@@ -1,0 +1,152 @@
+"""Sharded checkpointing: atomic, async, keep-last-k, reshard-on-load.
+
+Format: one directory per step containing
+  manifest.json — pytree structure, shapes, dtypes, logical shardings
+  arrays.npz    — flattened leaves (host-gathered)
+Writes go to `<dir>/tmp-<step>` then rename — a torn write can never be
+mistaken for a valid checkpoint (restart safety).  `restore(..., mesh=...)`
+re-device_puts every leaf under the *target* mesh's shardings, so elastic
+resizes (different data-axis extent) restore transparently.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+def _flatten(tree: PyTree) -> Tuple[List[np.ndarray], Any, List[str],
+                                    List[str]]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    keys = [f"leaf_{i}" for i in range(len(leaves))]
+    out, dtypes = [], []
+    for x in leaves:
+        a = np.asarray(x)
+        dtypes.append(str(a.dtype))   # logical dtype (pre-view)
+        if a.dtype == jnp.bfloat16:
+            a = a.view(np.uint16)     # npz cannot store bf16; view-roundtrip
+        out.append(a)
+    return out, treedef, keys, dtypes
+
+
+def save(ckpt_dir: str, step: int, tree: PyTree,
+         extra: Optional[Dict] = None) -> str:
+    """Synchronous atomic save; returns the final path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f"tmp-{step}")
+    final = os.path.join(ckpt_dir, f"step-{step:08d}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+    leaves, treedef, keys, dtypes = _flatten(tree)
+    np.savez(os.path.join(tmp, "arrays.npz"),
+             **{k: v for k, v in zip(keys, leaves)})
+    manifest = {
+        "step": step,
+        "treedef": str(treedef),
+        "keys": keys,
+        "shapes": [list(v.shape) for v in leaves],
+        "dtypes": dtypes,
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+class AsyncCheckpointer:
+    """Background-thread saver with keep-last-k garbage collection."""
+
+    def __init__(self, ckpt_dir: str, keep: int = 3):
+        self.ckpt_dir = ckpt_dir
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_error: Optional[BaseException] = None
+
+    def save_async(self, step: int, tree: PyTree,
+                   extra: Optional[Dict] = None) -> None:
+        self.wait()
+        # materialize on host *before* handing to the thread so training can
+        # immediately mutate the live buffers
+        host_tree = jax.tree.map(lambda x: np.asarray(x), tree)
+
+        def work():
+            try:
+                save(self.ckpt_dir, step, host_tree, extra)
+                self.gc()
+            except BaseException as e:  # surfaced on next wait()
+                self.last_error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self.last_error is not None:
+            err, self.last_error = self.last_error, None
+            raise err
+
+    def gc(self) -> None:
+        steps = list_steps(self.ckpt_dir)
+        for s in steps[:-self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.ckpt_dir, f"step-{s:08d}"),
+                          ignore_errors=True)
+
+
+def list_steps(ckpt_dir: str) -> List[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step-"):
+            out.append(int(name.split("-")[1]))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    steps = list_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like: PyTree,
+            sharding_fn: Optional[Callable[[str, Any], Any]] = None
+            ) -> Tuple[PyTree, Dict]:
+    """Restore into the structure of `like`.  `sharding_fn(key, abstract)` may
+    return a Sharding per leaf — this is the elastic reshard-on-load hook:
+    leaves are device_put under the *current* mesh regardless of how many
+    hosts/chips wrote the checkpoint."""
+    path = os.path.join(ckpt_dir, f"step-{step:08d}")
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    assert len(leaves_like) == len(manifest["keys"]), \
+        "checkpoint structure mismatch"
+    new_leaves = []
+    for i, (key, ref) in enumerate(zip(manifest["keys"], leaves_like)):
+        arr = data[key]
+        if manifest["dtypes"][i] == "bfloat16" and arr.dtype == np.uint16:
+            import ml_dtypes
+            arr = arr.view(ml_dtypes.bfloat16)
+        if sharding_fn is not None:
+            sh = sharding_fn(key, ref)
+            if sh is not None:
+                new_leaves.append(jax.device_put(jnp.asarray(arr), sh))
+                continue
+        new_leaves.append(jnp.asarray(arr).astype(ref.dtype)
+                          if hasattr(ref, "dtype") else arr)
+    return jax.tree_util.tree_unflatten(treedef, new_leaves), manifest["extra"]

@@ -1,0 +1,21 @@
+"""Core: the paper's contribution as a composable JAX module.
+
+Layers (DESIGN.md §2-3):
+  placement        — PlacementState: the TPU analogue of coherency states
+  perf_model       — L(A,S) = R_O(S) + E(A) + O, bandwidth, ILP-gap, calibration
+  contention       — §5.4 contention model (serialized ping-pong vs combining)
+  collective_model — mesh collectives priced from per-hop R_O terms
+  rmw              — vectorized CAS/FAA/SWP with serialized-equivalent semantics
+  validation       — the paper's NRMSE gate (Eq. 12)
+  planner          — model-driven schedule/capacity decisions
+"""
+
+from repro.core.placement import Ownership, PlacementState, Tier  # noqa: F401
+from repro.core.perf_model import (  # noqa: F401
+    RMW_OPS, TPU_V5E, HardwareSpec, bandwidth, calibrate, cpu_default_spec,
+    ilp_gap, latency, read_for_ownership, read_latency, relaxed_bandwidth,
+    unaligned_latency)
+from repro.core.rmw import (  # noqa: F401
+    OPS, RmwConfig, RmwResult, arrival_rank, rmw, rmw_combining,
+    rmw_serialized, scatter_add_grads, segmented_scan)
+from repro.core.validation import NRMSE_GATE, ValidationRow, nrmse, validate  # noqa: F401

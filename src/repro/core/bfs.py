@@ -1,0 +1,128 @@
+"""Graph500-style BFS with selectable RMW combiner semantics (paper §6.1).
+
+The paper's point: CAS/SWP/FAA cost the same, so pick the primitive whose
+*semantics* fit — for the bfs_tree parent array, CAS (set-if-unvisited) and
+SWP (swap + revert) give simple protocols while FAA needs a revert scheme.
+We reproduce the comparison with the vectorized combining RMW: per BFS
+level, all frontier edges issue parent-updates through the chosen combiner.
+
+Kronecker (RMAT) generator included — the paper benchmarks on Kronecker
+graphs that model heavy-tailed real-world graphs.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.rmw import rmw_combining
+
+Array = jax.Array
+
+
+def kronecker_graph(scale: int, edgefactor: int = 8, seed: int = 0,
+                    a=0.57, b=0.19, c=0.19) -> Tuple[np.ndarray, np.ndarray]:
+    """RMAT edge list (Graph500 generator), n = 2**scale nodes."""
+    n_edges = edgefactor * (1 << scale)
+    rng = np.random.default_rng(seed)
+    src = np.zeros(n_edges, np.int64)
+    dst = np.zeros(n_edges, np.int64)
+    for level in range(scale):
+        r = rng.random(n_edges)
+        bit_src = (r >= a + b) & (r < a + b + c) | (r >= a + b + c)
+        r2 = rng.random(n_edges)
+        bit_dst = ((r < a + b) & (r >= a)) | (r >= a + b + c)
+        del r2
+        src |= bit_src.astype(np.int64) << level
+        dst |= bit_dst.astype(np.int64) << level
+    perm = rng.permutation(1 << scale)       # shuffle vertex labels
+    return perm[src], perm[dst]
+
+
+@dataclasses.dataclass
+class BfsResult:
+    parent: Array
+    levels: int
+    edges_traversed: int
+
+
+@partial(jax.jit, static_argnames=("n", "op", "max_levels"))
+def _bfs_run(src: Array, dst: Array, root, n: int, op: str,
+             max_levels: int = 64):
+    parent = jnp.full((n,), -1, jnp.int32).at[root].set(root)
+
+    def level(state):
+        parent, frontier, lvl, edges = state
+        active = frontier[src]                       # edge's src in frontier
+        cand_dst = jnp.where(active, dst, n)         # OOR -> dropped
+        cand_par = src.astype(jnp.int32)
+        if op == "cas":
+            res = rmw_combining(parent, cand_dst, cand_par, "cas",
+                                jnp.int32(-1))
+            new_parent = res.table
+        elif op == "swp":
+            # swap unconditionally, then revert overwrites of visited nodes.
+            # The restore value is the FIRST collider's fetched (the original
+            # parent), so the revert stream runs reversed (last-wins of the
+            # reversed order == first in program order).
+            res = rmw_combining(parent, cand_dst, cand_par, "swp")
+            visited_before = res.fetched != -1
+            revert_idx = jnp.where(visited_before, cand_dst, n)
+            new_parent = rmw_combining(res.table, revert_idx[::-1],
+                                       res.fetched[::-1], "swp").table
+        else:  # faa with revert (the paper's "complex scheme")
+            delta = jnp.where(parent[jnp.clip(cand_dst, 0, n - 1)] == -1,
+                              cand_par + 1, 0)
+            res = rmw_combining(parent, cand_dst, delta, "faa")
+            over = res.table  # -1 + sum(deltas); keep first contributor only
+            # revert: recompute exact winner via min-combine of parities
+            first = rmw_combining(
+                jnp.full((n,), jnp.iinfo(jnp.int32).max, jnp.int32),
+                cand_dst, jnp.where(delta > 0, cand_par,
+                                    jnp.iinfo(jnp.int32).max), "min").table
+            new_parent = jnp.where(
+                (parent == -1) & (first != jnp.iinfo(jnp.int32).max),
+                first, parent)
+            del over
+        new_frontier = (new_parent != -1) & (parent == -1)
+        edges = edges + jnp.sum(active)
+        return new_parent, new_frontier, lvl + 1, edges
+
+    def cond(state):
+        _, frontier, lvl, _ = state
+        return jnp.any(frontier) & (lvl < max_levels)
+
+    frontier0 = jnp.zeros((n,), bool).at[root].set(True)
+    parent, _, lvl, edges = jax.lax.while_loop(
+        cond, level, (parent, frontier0, jnp.int32(0), jnp.int32(0)))
+    return parent, lvl, edges
+
+
+def bfs(src: np.ndarray, dst: np.ndarray, n: int, root: int = 0,
+        op: str = "cas") -> BfsResult:
+    """Level-synchronous BFS; op ∈ {cas, swp, faa} picks the combiner."""
+    parent, lvl, edges = _bfs_run(
+        jnp.asarray(src, jnp.int32), jnp.asarray(dst, jnp.int32),
+        jnp.int32(root), int(n), op)
+    return BfsResult(parent=parent, levels=int(lvl),
+                     edges_traversed=int(edges))
+
+
+def validate_parents(src: np.ndarray, dst: np.ndarray, parent: np.ndarray,
+                     root: int) -> bool:
+    """Every reached vertex's parent edge must exist; root is its own parent."""
+    parent = np.asarray(parent)
+    if parent[root] != root:
+        return False
+    edges = set(zip(np.asarray(src).tolist(), np.asarray(dst).tolist()))
+    for v in np.nonzero(parent >= 0)[0]:
+        if v == root:
+            continue
+        if (int(parent[v]), int(v)) not in edges:
+            return False
+    return True

@@ -1,0 +1,104 @@
+"""Deterministic, shardable data pipeline.
+
+Restart-exactness is the fault-tolerance contract (DESIGN.md §7): batch
+content is a pure function of (seed, step), so resuming from a checkpointed
+step reproduces the exact token stream with no reader state to persist.
+Two sources:
+  * synthetic  — hash-based token generator (benchmarks, dry-runs, tests)
+  * memmap     — flat binary token file (real corpora), sliced by (step,
+                 shard) with the same determinism
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seq_len: int
+    global_batch: int
+    vocab_size: int
+    seed: int = 0
+    source: str = "synthetic"          # "synthetic" | "memmap"
+    path: Optional[str] = None         # memmap token file (uint16/uint32)
+    mask_fraction: float = 0.0         # fraction of label positions masked
+
+
+def synthetic_batch(cfg: DataConfig, step: int,
+                    d_model: int = 0, with_embeds: bool = False,
+                    with_frames: int = 0,
+                    with_positions3: bool = False) -> Dict[str, Array]:
+    """Pure function of (seed, step) -> batch dict (model.py contract)."""
+    key = jax.random.fold_in(jax.random.PRNGKey(cfg.seed), step)
+    ks = jax.random.split(key, 4)
+    b, s = cfg.global_batch, cfg.seq_len
+    tokens = jax.random.randint(ks[0], (b, s), 0, cfg.vocab_size, jnp.int32)
+    labels = jnp.concatenate(
+        [tokens[:, 1:], jnp.full((b, 1), -100, jnp.int32)], axis=1)
+    batch: Dict[str, Array] = {"tokens": tokens, "labels": labels}
+    if with_embeds:
+        batch["embeds"] = jax.random.normal(ks[1], (b, s, d_model),
+                                            jnp.float32) * 0.02
+        del batch["tokens"]
+    if with_frames:
+        batch["frames"] = jax.random.normal(ks[2], (b, with_frames, d_model),
+                                            jnp.float32) * 0.02
+    if with_positions3:
+        pos = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None, :], (b, s))
+        batch["positions3"] = jnp.broadcast_to(pos[None], (3, b, s))
+    return batch
+
+
+class MemmapSource:
+    """Flat token file; batch (step, i) reads a deterministic window."""
+
+    def __init__(self, cfg: DataConfig):
+        assert cfg.path, "memmap source needs cfg.path"
+        self.cfg = cfg
+        self.tokens = np.memmap(cfg.path, dtype=np.uint16, mode="r")
+        self.n = len(self.tokens)
+
+    def batch(self, step: int) -> Dict[str, Array]:
+        cfg = self.cfg
+        b, s = cfg.global_batch, cfg.seq_len
+        rng = np.random.default_rng(cfg.seed * 1_000_003 + step)
+        starts = rng.integers(0, self.n - s - 1, size=b)
+        toks = np.stack([self.tokens[st:st + s].astype(np.int32)
+                         for st in starts])
+        labels = np.stack([self.tokens[st + 1:st + s + 1].astype(np.int32)
+                           for st in starts])
+        return {"tokens": jnp.asarray(toks), "labels": jnp.asarray(labels)}
+
+
+def make_iterator(cfg: DataConfig, start_step: int = 0,
+                  **synthetic_kw) -> Iterator[Dict[str, Array]]:
+    """Resumable iterator: pass the checkpointed step as start_step."""
+    src = MemmapSource(cfg) if cfg.source == "memmap" else None
+    step = start_step
+    while True:
+        if src is not None:
+            yield src.batch(step)
+        else:
+            yield synthetic_batch(cfg, step, **synthetic_kw)
+        step += 1
+
+
+def batch_kwargs_for(cfg_model) -> Dict:
+    """synthetic_batch kwargs required by a ModelConfig's input contract."""
+    kw: Dict = {}
+    if cfg_model.embeds_input:
+        kw.update(with_embeds=True, d_model=cfg_model.d_model)
+    if cfg_model.encoder is not None:
+        kw.update(with_frames=cfg_model.encoder.n_frames,
+                  d_model=cfg_model.d_model)
+    if cfg_model.pos_emb == "mrope":
+        kw.update(with_positions3=True)
+    return kw

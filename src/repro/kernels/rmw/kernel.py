@@ -1,0 +1,113 @@
+"""Pallas TPU kernel: combining RMW (the paper's atomics, MXU-native).
+
+TPU adaptation (DESIGN.md §2): a batch of atomic RMWs against a table is
+re-expressed as a **one-hot matmul reduction** so that the combine runs on the
+MXU/VPU instead of serializing, realizing the paper's proposed relaxed
+atomics (§6.2.3).  For a table tile T (kept in VMEM across the inner grid
+axis) and an index/value block B:
+
+    one_hot[b, t] = (indices[b] == tile_start + t)
+    faa:  tile += values @ one_hot              (1xB @ BxT matmul -> MXU)
+    min/max: tile = combine(tile, masked col-reduce of values)
+    swp:  tile = value of the *latest* collider per slot (last-wins)
+
+Grid = (table_tiles, index_blocks); the index-block axis is the reduction
+("arbitrary") axis, the table-tile axis is parallel.  The index/value blocks
+stream HBM->VMEM once per table tile; the table tile stays resident in VMEM —
+this is the paper's Eq. (10) amortization with the VMEM tile in the
+cache-line role.
+
+Alignment: TABLE_TILE is a multiple of 128 (lane width) — the benchmark
+`benchmarks/unaligned.py` measures the penalty of violating this, the TPU
+analogue of the paper's §5.7 line-spanning atomics.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_TABLE_TILE = 512      # table slots per tile (multiple of 128)
+DEFAULT_BLOCK = 1024          # index/value elements per block
+
+
+def _rmw_kernel(idx_ref, val_ref, table_ref, out_ref, *, op: str,
+                table_tile: int, block: int):
+    tile_id = pl.program_id(0)
+    blk_id = pl.program_id(1)
+
+    # Initialize the output tile from the input table on the first block.
+    @pl.when(blk_id == 0)
+    def _init():
+        out_ref[...] = table_ref[...]
+
+    tile_start = tile_id * table_tile
+    idx = idx_ref[...].astype(jnp.int32)            # (1, block)
+    val = val_ref[...]                              # (1, block)
+    slots = jax.lax.broadcasted_iota(jnp.int32, (block, table_tile), 1)
+    local = idx.reshape(block, 1) - tile_start
+    one_hot = (local == slots)                      # (block, table_tile)
+
+    acc = out_ref[...]                              # (1, table_tile)
+    if op == "faa":
+        # MXU path: (1, block) @ (block, tile) — the combining reduction.
+        upd = jnp.dot(val, one_hot.astype(val.dtype),
+                      preferred_element_type=jnp.float32)
+        out_ref[...] = acc + upd.astype(acc.dtype)
+    elif op in ("min", "max"):
+        neutral = (jnp.asarray(jnp.finfo(val.dtype).max, val.dtype) if op == "min"
+                   else jnp.asarray(jnp.finfo(val.dtype).min, val.dtype))
+        masked = jnp.where(one_hot, val.reshape(block, 1), neutral)
+        red = (jnp.min(masked, axis=0) if op == "min"
+               else jnp.max(masked, axis=0)).reshape(1, table_tile)
+        comb = jnp.minimum if op == "min" else jnp.maximum
+        out_ref[...] = comb(acc, red)
+    elif op == "swp":
+        # last-wins: the collider with the highest global batch position.
+        pos = jax.lax.broadcasted_iota(jnp.int32, (block, table_tile), 0) \
+            + blk_id * block
+        masked_pos = jnp.where(one_hot, pos, -1)
+        best = jnp.max(masked_pos, axis=0).reshape(1, table_tile)  # (1, tile)
+        # gather the winning value via a second one-hot contraction
+        sel = (masked_pos == best) & one_hot & (best >= 0)
+        winner = jnp.dot(val, sel.astype(val.dtype),
+                         preferred_element_type=jnp.float32)
+        out_ref[...] = jnp.where(best >= 0, winner.astype(acc.dtype), acc)
+    else:
+        raise ValueError(f"unknown op {op!r}")
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("op", "table_tile", "block", "interpret"))
+def rmw_table(table: jax.Array, indices: jax.Array, values: jax.Array,
+              op: str = "faa", *, table_tile: int = DEFAULT_TABLE_TILE,
+              block: int = DEFAULT_BLOCK, interpret: bool = True) -> jax.Array:
+    """Apply a combining-RMW batch to a 1-D fp32 table.
+
+    Requires table size % table_tile == 0 and batch % block == 0 (ops.py pads).
+    Out-of-range indices never match a slot and are dropped (mask tokens).
+    """
+    n = table.shape[0]
+    nb = indices.shape[0]
+    assert n % table_tile == 0, (n, table_tile)
+    assert nb % block == 0, (nb, block)
+    grid = (n // table_tile, nb // block)
+
+    kernel = functools.partial(_rmw_kernel, op=op, table_tile=table_tile,
+                               block=block)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block), lambda t, b: (0, b)),       # indices
+            pl.BlockSpec((1, block), lambda t, b: (0, b)),       # values
+            pl.BlockSpec((1, table_tile), lambda t, b: (0, t)),  # table in
+        ],
+        out_specs=pl.BlockSpec((1, table_tile), lambda t, b: (0, t)),
+        out_shape=jax.ShapeDtypeStruct((1, n), table.dtype),
+        interpret=interpret,
+    )(indices.reshape(1, nb), values.reshape(1, nb), table.reshape(1, n))
+    return out.reshape(n)

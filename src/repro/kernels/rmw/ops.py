@@ -1,0 +1,60 @@
+"""jit'd public wrappers for the combining-RMW kernel.
+
+Handles padding (table to the tile multiple, batch to the block multiple),
+dtype management, and backend selection: on TPU the Mosaic kernel runs
+compiled; elsewhere ``interpret=True`` executes the same kernel body (the
+validation mode used by this container's tests/benchmarks).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.rmw import kernel as _k
+from repro.kernels.rmw import ref as _ref
+
+Array = jax.Array
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _pad_to(x: Array, multiple: int, fill) -> Array:
+    n = x.shape[0]
+    rem = (-n) % multiple
+    if rem == 0:
+        return x
+    return jnp.concatenate([x, jnp.full((rem,), fill, x.dtype)])
+
+
+@functools.partial(jax.jit, static_argnames=("op", "table_tile", "block",
+                                             "use_kernel"))
+def rmw_apply(table: Array, indices: Array, values: Array, op: str = "faa",
+              *, table_tile: int = _k.DEFAULT_TABLE_TILE,
+              block: int = _k.DEFAULT_BLOCK, use_kernel: bool = True) -> Array:
+    """Combining-RMW a batch into a 1-D table.  Returns the updated table.
+
+    Out-of-range indices are dropped (padding / masked tokens use index = n).
+    """
+    if not use_kernel:
+        return _ref.rmw_table_ref(table, indices, values, op)
+    n = table.shape[0]
+    values = values.astype(table.dtype)
+    tab_p = _pad_to(table, table_tile, 0)
+    # padded table slots must not capture ops: point padding indices past even
+    # the padded table
+    idx_p = _pad_to(indices.astype(jnp.int32), block, jnp.int32(tab_p.shape[0]))
+    val_p = _pad_to(values, block, 0)
+    out = _k.rmw_table(tab_p, idx_p, val_p, op, table_tile=table_tile,
+                       block=block, interpret=not _on_tpu())
+    return out[:n]
+
+
+def histogram(indices: Array, num_bins: int, **kw) -> Array:
+    """Expert-load histogram — FAA with unit values (MoE routing's counter)."""
+    return rmw_apply(jnp.zeros((num_bins,), jnp.float32), indices,
+                     jnp.ones(indices.shape, jnp.float32), "faa", **kw)

@@ -1,0 +1,55 @@
+"""Pure-jnp oracle for the combining-RMW kernel.
+
+Semantics contract (shared with kernels/rmw/kernel.py):
+given a 1-D ``table`` (padded to the kernel's table-tile multiple), ``indices``
+and ``values`` batches, return the table after applying the whole batch with
+the selected combiner:
+
+  faa — table[i] += sum of colliding values            (order-free)
+  min/max — combine with minimum / maximum             (order-free)
+  swp — last collider (by batch position) wins         (order-dependent)
+
+Out-of-range indices (>= table size) are dropped — the kernel uses this to
+implement masking/padding, and MoE dispatch uses it for token dropping.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def rmw_table_ref(table: Array, indices: Array, values: Array, op: str) -> Array:
+    n = table.shape[0]
+    valid = indices < n
+    safe_idx = jnp.where(valid, indices, 0)
+    if op == "faa":
+        contrib = jnp.where(valid, values, jnp.zeros_like(values))
+        return table.at[safe_idx].add(contrib)
+    if op == "min":
+        big = jnp.asarray(jnp.finfo(values.dtype).max
+                          if jnp.issubdtype(values.dtype, jnp.floating)
+                          else jnp.iinfo(values.dtype).max, values.dtype)
+        return table.at[safe_idx].min(jnp.where(valid, values, big))
+    if op == "max":
+        small = jnp.asarray(jnp.finfo(values.dtype).min
+                            if jnp.issubdtype(values.dtype, jnp.floating)
+                            else jnp.iinfo(values.dtype).min, values.dtype)
+        return table.at[safe_idx].max(jnp.where(valid, values, small))
+    if op == "swp":
+        # last-wins: iterate in order via scatter of the *last* collider only
+        pos = jnp.arange(indices.shape[0], dtype=jnp.int32)
+        last_pos = jnp.full((n,), -1, jnp.int32).at[safe_idx].max(
+            jnp.where(valid, pos, -1))
+        written = last_pos >= 0
+        gathered = values[jnp.clip(last_pos, 0, None)]
+        return jnp.where(written, gathered, table)
+    raise ValueError(f"unknown op {op!r}")
+
+
+def histogram_ref(indices: Array, num_bins: int) -> Array:
+    """FAA special case: the expert-load histogram MoE routing needs."""
+    return rmw_table_ref(jnp.zeros((num_bins,), jnp.float32), indices,
+                         jnp.ones(indices.shape, jnp.float32), "faa")

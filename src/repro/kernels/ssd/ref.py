@@ -1,0 +1,47 @@
+"""Pure-jnp oracle for the Mamba-2 SSD (state-space duality) scan.
+
+Sequential recurrence (the definition, arXiv:2405.21060 §3):
+    h_t = exp(A * dt_t) * h_{t-1} + dt_t * (B_t ⊗ x_t)     h: (N, P)
+    y_t = C_t^T h_t
+Layouts: x (B, S, H, P), dt (B, S, H), A (H,), B/C (B, S, H, N).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def ssd_ref(x: Array, dt: Array, A: Array, B: Array, C: Array) -> Array:
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+
+    def per_bh(xbh, dtbh, a, bbh, cbh):
+        # xbh (S,P), dtbh (S,), bbh/cbh (S,N), a scalar
+        def step(hstate, inp):
+            xt, dtt, bt, ct = inp
+            hstate = jnp.exp(a * dtt) * hstate + dtt * jnp.outer(bt, xt)
+            return hstate, ct @ hstate
+
+        h0 = jnp.zeros((n, p), jnp.float32)
+        _, y = jax.lax.scan(step, h0, (xbh.astype(jnp.float32),
+                                       dtbh.astype(jnp.float32),
+                                       bbh.astype(jnp.float32),
+                                       cbh.astype(jnp.float32)))
+        return y
+
+    f = jax.vmap(jax.vmap(per_bh, in_axes=(1, 1, 0, 1, 1), out_axes=1),
+                 in_axes=(0, 0, None, 0, 0), out_axes=0)
+    return f(x, dt, A, B, C).astype(x.dtype)
+
+
+def ssd_decode_ref(hstate: Array, x: Array, dt: Array, A: Array, B: Array,
+                   C: Array) -> tuple[Array, Array]:
+    """One decode step.  hstate (B,H,N,P), x (B,H,P), dt (B,H), B/C (B,H,N)."""
+    decay = jnp.exp(A[None, :] * dt)[..., None, None]
+    hstate = decay * hstate + dt[..., None, None] * jnp.einsum(
+        "bhn,bhp->bhnp", B, x)
+    y = jnp.einsum("bhn,bhnp->bhp", C, hstate)
+    return hstate, y

@@ -1,0 +1,275 @@
+import os
+if not os.environ.get("REPRO_DRYRUN_NO_DEVICE_OVERRIDE"):
+    os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                               + " --xla_force_host_platform_device_count=512")
+# ^ MUST run before any other import so jax sees 512 placeholder devices.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces (written incrementally to --out as JSON):
+  * compiled.memory_analysis()  — bytes per device (proves it fits)
+  * compiled.cost_analysis()    — HLO FLOPs / bytes for §Roofline
+  * collective_bytes            — parsed from the post-SPMD HLO text
+  * wall seconds spent lowering / compiling
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch gemma_2b \
+      --shape train_4k --mesh single --out experiments/dryrun
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import (ARCH_IDS, ShapeCell, cells_for, get_config,
+                           SHAPES)
+from repro.launch import shardings as sh
+from repro.launch.hlo_stats import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (abstract_train_state, make_decode_step,
+                                make_prefill_step, make_train_step)
+from repro.models.model import build_model
+from repro.optim.adamw import AdamWConfig
+from repro.sharding import use_mesh
+
+
+def input_specs(cfg, shape: ShapeCell) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    b = shape.global_batch
+    s = shape.seq_len if shape.kind != "decode" else 1
+    f32, i32 = jnp.float32, jnp.int32
+    batch: Dict[str, Any] = {}
+    if cfg.embeds_input:
+        batch["embeds"] = jax.ShapeDtypeStruct((b, s, cfg.d_model),
+                                               jnp.bfloat16)
+    else:
+        batch["tokens"] = jax.ShapeDtypeStruct((b, s), i32)
+    if shape.kind == "train":
+        batch["labels"] = jax.ShapeDtypeStruct((b, s), i32)
+    if cfg.encoder is not None:
+        batch["frames"] = jax.ShapeDtypeStruct(
+            (b, cfg.encoder.n_frames, cfg.d_model), jnp.bfloat16)
+    if cfg.pos_emb == "mrope":
+        batch["positions3"] = jax.ShapeDtypeStruct((3, b, s), i32)
+    return batch
+
+
+def _moment_dtype(cfg) -> str:
+    return "bfloat16" if cfg.param_count() > 2e11 else "float32"
+
+
+def default_microbatches(cfg, shape: ShapeCell, n_data: int) -> int:
+    """Grad-accumulation factor sized so the per-chip saved residual carry
+    (L x T_mb x d x ~6B: bf16 + the XLA-CPU f32 duplicate) stays ~<= 6GB."""
+    if shape.kind != "train":
+        return 1
+    t_loc = shape.global_batch * shape.seq_len // max(n_data, 1)
+    batch_loc = max(1, shape.global_batch // max(n_data, 1))
+    mb = 1
+    while mb < batch_loc:
+        carry = cfg.n_layers * (t_loc / mb) * cfg.d_model * 6
+        if carry <= 6e9:
+            break
+        mb *= 2
+    return mb
+
+
+def run_cell(arch: str, shape: ShapeCell, multi_pod: bool,
+             overrides: Optional[Dict[str, Any]] = None) -> Dict[str, Any]:
+    overrides = overrides or {}
+    cfg = get_config(arch)
+    if "capacity_factor" in overrides and cfg.moe is not None:
+        import dataclasses as _dc
+        cfg = cfg.replace(moe=_dc.replace(
+            cfg.moe, capacity_factor=float(overrides["capacity_factor"])))
+    if "q_chunk" in overrides:
+        from repro.models import attention as _attn
+        _attn.DEFAULT_Q_CHUNK_OVERRIDE = int(overrides["q_chunk"])
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_chips = mesh.size
+    seq_shard = shape.name == "long_500k"
+    rules = sh.arch_rules(cfg, mesh, shape.kind, seq_shard_carry=seq_shard)
+    rules.update(overrides.get("rules", {}))
+    model = build_model(
+        cfg,
+        attn_impl=overrides.get("attn_impl", "chunked"),
+        remat_policy=overrides.get("remat_policy", "full"),
+        loss_chunk=overrides.get("loss_chunk", 2048))
+    opt_cfg = AdamWConfig(moment_dtype=_moment_dtype(cfg))
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape.name, "mesh": "multi" if multi_pod
+        else "single", "chips": n_chips, "rules": {k: str(v) for k, v
+                                                   in rules.items()},
+        "overrides": {k: str(v) for k, v in overrides.items()},
+    }
+
+    from contextlib import ExitStack
+    from repro.models.runtime_flags import set_unroll_scans
+    stack = ExitStack()
+    if overrides.get("unroll", False):
+        # optional: unrolled scans => XLA's own cost_analysis counts every
+        # layer once (used to validate the rolled-program HLO parser)
+        stack.enter_context(set_unroll_scans(True))
+    with stack, use_mesh(mesh, rules):
+        batch_abs = input_specs(cfg, shape)
+        batch_sh = sh.batch_shardings(batch_abs, mesh, rules)
+        t0 = time.time()
+        if shape.kind == "train":
+            params_abs, opt_abs = abstract_train_state(model, opt_cfg)
+            params_sh = sh.params_shardings(cfg, params_abs, mesh, rules)
+            opt_sh = sh.opt_state_shardings(opt_abs, params_sh, mesh)
+            n_data = n_chips // mesh.shape.get("model", 1)
+            mb = overrides.get("microbatches",
+                               default_microbatches(cfg, shape, n_data))
+            rec["microbatches"] = mb
+            step = make_train_step(model, opt_cfg, microbatches=mb)
+            jitted = jax.jit(step,
+                             in_shardings=(params_sh, opt_sh, batch_sh),
+                             out_shardings=(params_sh, opt_sh, None),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(params_abs, opt_abs, batch_abs)
+        elif shape.kind == "prefill":
+            params_abs = jax.eval_shape(
+                lambda: model.init(jax.random.PRNGKey(0)))
+            params_sh = sh.params_shardings(cfg, params_abs, mesh, rules)
+            step = make_prefill_step(model, s_max=shape.seq_len)
+            # cache outputs carry explicit shardings (seq-sharded kv)
+            cache_out_abs = jax.eval_shape(step, params_abs, batch_abs)[0]
+            cache_out_sh = sh.cache_shardings(cache_out_abs, mesh, rules)
+            jitted = jax.jit(step, in_shardings=(params_sh, batch_sh),
+                             out_shardings=(cache_out_sh, None))
+            lowered = jitted.lower(params_abs, batch_abs)
+        else:  # decode
+            params_abs = jax.eval_shape(
+                lambda: model.init(jax.random.PRNGKey(0)))
+            params_sh = sh.params_shardings(cfg, params_abs, mesh, rules)
+            cache_abs = jax.eval_shape(
+                lambda: model.init_cache(shape.global_batch, shape.seq_len))
+            if cfg.encoder is not None:
+                cache_abs["enc_out"] = jax.ShapeDtypeStruct(
+                    (shape.global_batch, cfg.encoder.n_frames, cfg.d_model),
+                    jnp.bfloat16)
+            cache_sh = sh.cache_shardings(cache_abs, mesh, rules)
+            step = make_decode_step(model)
+            jitted = jax.jit(step,
+                             in_shardings=(params_sh, cache_sh, batch_sh),
+                             out_shardings=(cache_sh, None),
+                             donate_argnums=(1,))
+            lowered = jitted.lower(params_abs, cache_abs, batch_abs)
+        rec["lower_s"] = round(time.time() - t0, 2)
+
+        t0 = time.time()
+        compiled = lowered.compile()
+        rec["compile_s"] = round(time.time() - t0, 2)
+
+        mem = compiled.memory_analysis()
+        if mem is not None:
+            for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                      "temp_size_in_bytes", "generated_code_size_in_bytes",
+                      "alias_size_in_bytes"):
+                v = getattr(mem, k, None)
+                if v is not None:
+                    rec[k] = int(v)
+            args_b = rec.get("argument_size_in_bytes", 0)
+            alias_b = rec.get("alias_size_in_bytes", 0)
+            peak = (args_b + rec.get("output_size_in_bytes", 0)
+                    + rec.get("temp_size_in_bytes", 0) - alias_b)
+            rec["per_device_peak_bytes"] = int(peak)
+        cost = compiled.cost_analysis()
+        if cost:
+            c = cost if isinstance(cost, dict) else cost[0]
+            rec["hlo_flops"] = float(c.get("flops", -1))
+            rec["hlo_bytes"] = float(c.get("bytes accessed", -1))
+            rec["cost_keys"] = sorted(k for k in c.keys())[:40]
+        hlo = compiled.as_text()
+        stats = analyze_hlo(hlo, world=n_chips)
+        rec["collectives"] = {k: v for k, v in stats.items()
+                              if isinstance(v, dict)}
+        rec["total_wire_bytes"] = stats["total_wire_bytes"]
+        rec["dot_flops"] = stats["dot_flops"]          # expanded, per chip
+        rec["result_bytes"] = stats["result_bytes"]    # expanded, per chip
+        rec["dot_bytes"] = stats["dot_bytes"]          # HBM-traffic proxy
+        rec["hlo_len"] = len(hlo)
+        # MODEL_FLOPS: 6*N_active*D for train (fwd+bwd), 2*N_active*D for
+        # forward-only prefill/decode
+        mult = 6.0 if shape.kind == "train" else 2.0
+        tokens = shape.global_batch * (shape.seq_len
+                                       if shape.kind != "decode" else 1)
+        rec["model_flops_global"] = mult * cfg.active_param_count() * tokens
+        if overrides.get("save_hlo", True):
+            import gzip
+            out_dir = overrides.get("hlo_dir", "experiments/hlo")
+            os.makedirs(out_dir, exist_ok=True)
+            tag = overrides.get("tag", "baseline")
+            fname = (f"{arch}.{shape.name}."
+                     f"{'multi' if multi_pod else 'single'}.{tag}.hlo.gz")
+            with gzip.open(os.path.join(out_dir, fname), "wt") as f:
+                f.write(hlo)
+            rec["hlo_path"] = os.path.join(out_dir, fname)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=("single", "multi",
+                                                       "both"))
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--overrides", default=None,
+                    help="JSON dict of overrides (perf iterations)")
+    ap.add_argument("--tag", default="baseline")
+    args = ap.parse_args()
+
+    overrides = json.loads(args.overrides) if args.overrides else {}
+    os.makedirs(args.out, exist_ok=True)
+
+    if args.all:
+        todo = [(a, s) for a in ARCH_IDS for s in cells_for(a)]
+    else:
+        assert args.arch and args.shape
+        cell = next(s for s in SHAPES if s.name == args.shape)
+        todo = [(args.arch, cell)]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    n_fail = 0
+    for arch, cell in todo:
+        for multi in meshes:
+            mesh_name = "multi" if multi else "single"
+            name = f"{arch}.{cell.name}.{mesh_name}.{args.tag}"
+            path = os.path.join(args.out, name + ".json")
+            if os.path.exists(path):
+                print(f"[skip] {name} (exists)")
+                continue
+            print(f"[run ] {name}", flush=True)
+            try:
+                rec = run_cell(arch, cell, multi, overrides)
+                rec["status"] = "ok"
+            except Exception as e:  # noqa: BLE001
+                rec = {"arch": arch, "shape": cell.name, "mesh": mesh_name,
+                       "status": "fail", "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-4000:]}
+                n_fail += 1
+                print(f"[FAIL] {name}: {e}", flush=True)
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1)
+            if rec["status"] == "ok":
+                print(f"[ ok ] {name} lower={rec['lower_s']}s "
+                      f"compile={rec['compile_s']}s "
+                      f"flops={rec.get('hlo_flops', 0):.3g} "
+                      f"peakB={rec.get('per_device_peak_bytes', 0):.3g}",
+                      flush=True)
+    print(f"done; failures={n_fail}")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,282 @@
+"""Parse post-SPMD HLO text for collective operations and wire bytes.
+
+cost_analysis() does not report collective traffic, so the roofline's
+collective term comes from here.  Collectives that live inside scanned layer
+stacks appear *once* in the HLO text but execute once per loop trip, so the
+parser is computation-aware: it builds the while-loop call graph, extracts
+trip counts from loop-condition constants, and multiplies nested collective
+bytes accordingly.
+
+Wire-byte conventions (per participant, ring schedules — matching
+core/collective_model.py):
+  all-gather:         out_bytes * (n-1)/n
+  reduce-scatter:     in_bytes  * (n-1)/n
+  all-reduce:         2 * in_bytes * (n-1)/n
+  all-to-all:         in_bytes  * (n-1)/n
+  collective-permute: in_bytes
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_OP_RE = re.compile(
+    r"=\s*(?:\([^)]*\)|[\w\[\],{}]+)?\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_WHILE_RE = re.compile(
+    r"=.*\bwhile\(.*condition=%?([\w.\-]+).*body=%?([\w.\-]+)", re.DOTALL)
+_COMP_START_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _shape_bytes(type_str: str) -> int:
+    m = _SHAPE_RE.match(type_str.strip())
+    if not m:
+        return 0
+    dt, dims = m.group(1), m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dt, 4)
+
+
+def _line_result_bytes(line: str) -> int:
+    try:
+        rhs = line.split("=", 1)[1].strip()
+    except IndexError:
+        return 0
+    if rhs.startswith("("):
+        inner = rhs[1:rhs.index(")")]
+        # shapes contain commas — findall, don't split
+        return sum(_shape_bytes(p)
+                   for p in re.findall(r"\w+\[[\d,]*\]", inner))
+    return _shape_bytes(rhs)
+
+
+def _line_operand_bytes(line: str, opname: str) -> int:
+    m = _OP_RE.search(line)
+    if not m:
+        return 0
+    start = line.index("(", m.end() - 1)
+    depth, i = 0, start
+    while i < len(line):
+        if line[i] == "(":
+            depth += 1
+        elif line[i] == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        i += 1
+    args = line[start + 1:i]
+    return sum(_shape_bytes(p) for p in re.findall(r"\w+\[[\d,]*\]", args))
+
+
+def _group_size(line: str, world: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return world
+
+
+def split_computations(hlo: str) -> Tuple[Dict[str, List[str]], str]:
+    """-> ({computation name: lines}, entry_name)."""
+    comps: Dict[str, List[str]] = {}
+    entry = ""
+    cur: List[str] = []
+    cur_name = None
+    for raw in hlo.splitlines():
+        line = raw.rstrip()
+        stripped = line.strip()
+        m = _COMP_START_RE.match(line) if (line and not line[0].isspace()) \
+            else None
+        if m and stripped.endswith("{"):
+            cur_name = m.group(1)
+            cur = []
+            comps[cur_name] = cur
+            if line.startswith("ENTRY"):
+                entry = cur_name
+        elif stripped == "}":
+            cur_name = None
+        elif cur_name is not None:
+            cur.append(stripped)
+    return comps, entry
+
+
+def _trip_count(cond_lines: List[str]) -> int:
+    """Heuristic: largest integer constant in the loop condition."""
+    best = 1
+    for line in cond_lines:
+        for m in _CONST_RE.finditer(line):
+            best = max(best, int(m.group(1)))
+    return best
+
+
+_DOT_RE = re.compile(
+    r"=\s*(\w+\[[\d,]*\])[^=]*?\bdot\(%?([\w.\-]+),\s*%?([\w.\-]+)\)(.*)$")
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\w+\[[\d,]*\])")
+_RHS_CDIMS_RE = re.compile(r"rhs_contracting_dims=\{([\d,]*)\}")
+_CALLS_RE = re.compile(r"\b(?:calls|body)=%?([\w.\-]+)")
+
+
+def _dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.match(type_str.strip())
+    if not m or not m.group(2):
+        return []
+    return [int(d) for d in m.group(2).split(",")]
+
+
+def analyze_hlo(hlo: str, world: int = 512) -> Dict[str, Dict]:
+    """Full expanded analysis: collectives + dot flops + result-byte traffic.
+
+    Equivalent to `collective_bytes_from_hlo` plus:
+      dot_flops     — 2 * result_elems * contraction, expanded by loop trips
+      result_bytes  — sum of all op result bytes (≈ bytes written), expanded
+    """
+    return _analyze(hlo, world)
+
+
+def collective_bytes_from_hlo(hlo: str, world: int = 512) -> Dict[str, Dict]:
+    return _analyze(hlo, world)
+
+
+def _analyze(hlo: str, world: int) -> Dict[str, Dict]:
+    comps, entry = split_computations(hlo)
+    if not entry:
+        # fallback: flat scan of all lines
+        comps = {"__all__": [ln.strip() for ln in hlo.splitlines()]}
+        entry = "__all__"
+
+    memo: Dict[str, Dict[str, Dict]] = {}
+
+    def eval_comp(name: str, seen=()) -> Dict[str, Dict]:
+        if name in memo:
+            return memo[name]
+        if name in seen or name not in comps:
+            return {}
+        lines = comps[name]
+        # symbol table: op name -> result type (for dot contraction sizes)
+        sym: Dict[str, str] = {}
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if dm:
+                sym[dm.group(1)] = dm.group(2)
+        stats: Dict[str, Dict] = {}
+
+        def add(kind: str, count: float, wire: float):
+            s = stats.setdefault(kind, {"count": 0.0, "wire_bytes": 0.0})
+            s["count"] += count
+            s["wire_bytes"] += wire
+
+        def add_flops(count: float, flops: float, bytes_: float,
+                      dbytes: float = 0.0):
+            s = stats.setdefault("__compute__",
+                                 {"count": 0.0, "dot_flops": 0.0,
+                                  "result_bytes": 0.0, "dot_bytes": 0.0})
+            s["count"] += count
+            s["dot_flops"] += flops
+            s["result_bytes"] += bytes_
+            s["dot_bytes"] += dbytes
+
+        for line in lines:
+            # result-byte traffic of every op (upper-bound bytes-written)
+            rb = _line_result_bytes(line)
+            if rb:
+                add_flops(0, 0.0, float(rb))
+            dm = _DOT_RE.search(line)
+            if dm:
+                res_t, lhs, rhs, attrs = dm.groups()
+                res_elems = 1
+                for d in _dims(res_t):
+                    res_elems *= d
+                cm = _RHS_CDIMS_RE.search(attrs)
+                contraction = 1
+                if cm and cm.group(1):
+                    rdims = _dims(sym.get(rhs, ""))
+                    for ax in cm.group(1).split(","):
+                        ax = int(ax)
+                        if ax < len(rdims):
+                            contraction *= rdims[ax]
+                # matmul-touched bytes: lhs + rhs + out (the HBM-traffic
+                # proxy — fused elementwise rides along with these)
+                dbytes = (_shape_bytes(sym.get(lhs, ""))
+                          + _shape_bytes(sym.get(rhs, ""))
+                          + _shape_bytes(res_t))
+                add_flops(1, 2.0 * res_elems * contraction, 0.0, dbytes)
+            om = _OP_RE.search(line)
+            if om:
+                kind = om.group(1)
+                n = max(2, _group_size(line, world))
+                # operands print without type annotations in this dialect, so
+                # wire bytes derive from the RESULT type (in==out for
+                # all-reduce/all-to-all/permute; out = n*in for all-gather;
+                # in = n*out for reduce-scatter)
+                outb = _line_result_bytes(line)
+                if kind == "all-gather":
+                    wire = outb * (n - 1) / n
+                elif kind == "reduce-scatter":
+                    wire = outb * (n - 1)
+                elif kind == "all-reduce":
+                    wire = 2 * outb * (n - 1) / n
+                elif kind == "all-to-all":
+                    wire = outb * (n - 1) / n
+                else:
+                    wire = outb
+                add(kind, 1, wire)
+                continue
+            wm = _WHILE_RE.search(line)
+            if wm:
+                cond, body = wm.group(1), wm.group(2)
+                trips = _trip_count(comps.get(cond, []))
+                child = eval_comp(body, seen + (name,))
+                for kind, s in child.items():
+                    if kind == "__compute__":
+                        add_flops(s["count"] * trips,
+                                  s["dot_flops"] * trips,
+                                  s["result_bytes"] * trips,
+                                  s["dot_bytes"] * trips)
+                    else:
+                        add(kind, s["count"] * trips,
+                            s["wire_bytes"] * trips)
+                continue
+            cmm = _CALLS_RE.search(line)
+            if cmm and "while(" not in line:
+                child = eval_comp(cmm.group(1), seen + (name,))
+                for kind, s in child.items():
+                    if kind == "__compute__":
+                        add_flops(s["count"], s["dot_flops"],
+                                  s["result_bytes"], s["dot_bytes"])
+                    else:
+                        add(kind, s["count"], s["wire_bytes"])
+        memo[name] = stats
+        return stats
+
+    stats = dict(eval_comp(entry))
+    total = sum(s["wire_bytes"] for s in stats.values()
+                if isinstance(s, dict) and "wire_bytes" in s)
+    stats["total_wire_bytes"] = total  # type: ignore[assignment]
+    compute = stats.pop("__compute__", {"count": 0, "dot_flops": 0.0,
+                                        "result_bytes": 0.0,
+                                        "dot_bytes": 0.0})
+    stats["dot_flops"] = compute["dot_flops"]  # type: ignore[assignment]
+    stats["result_bytes"] = compute["result_bytes"]  # type: ignore
+    stats["dot_bytes"] = compute["dot_bytes"]  # type: ignore[assignment]
+    stats["dot_count"] = compute["count"]  # type: ignore[assignment]
+    return stats

@@ -1,0 +1,175 @@
+"""Parameter / batch / cache sharding rules (logical axes -> mesh).
+
+Every parameter leaf gets logical axis names from its tree path; the mapping
+logical->physical is divisibility-aware (repro.sharding), which implements
+the per-arch TP policy automatically: e.g. gemma's 8 q-heads on a 16-way
+model axis simply stay replicated while its 16384-wide d_ff shards.
+
+Per-shape overrides:
+  * long-context decode ("long_500k") shards the KV-cache sequence over the
+    data axis (split-KV decode) since batch=1 leaves data idle otherwise.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.sharding import DEFAULT_RULES, logical_to_physical, use_mesh
+
+# logical axes per param name (applied to the trailing dims; stacked stage
+# params get a leading "layers"=None axis automatically)
+_PARAM_AXES: Dict[str, Tuple[Optional[str], ...]] = {
+    "embed": ("vocab", "embed"),
+    "lm_head": ("vocab", "embed"),
+    "pos_embed": (None, "embed"),
+    "enc_pos": (None, "embed"),
+    # attention
+    "wq": ("fsdp", "qkv"),
+    "wk": ("fsdp", "kv_qkv"),
+    "wv": ("fsdp", "kv_qkv"),
+    "wo": ("qkv", "fsdp"),
+    "bq": ("qkv",), "bk": ("kv_qkv",), "bv": ("kv_qkv",),
+    # MLA
+    "wq_a": ("fsdp", None),
+    "wq_b": (None, "qkv"),
+    "wkv_a": ("fsdp", None),
+    "wkv_b": (None, "qkv"),
+    # MLP
+    "w1": ("fsdp", "ffn"),
+    "w3": ("fsdp", "ffn"),
+    "w2": ("ffn", "fsdp"),
+    "b1": ("ffn",), "b2": (None,),
+    # MoE (leading experts dim; shard_map expects P("model", fsdp, None))
+    "router": ("fsdp", None),
+    # mamba
+    "in_proj": ("fsdp", "ffn"),
+    "out_proj": ("ffn", "fsdp"),
+    "conv_w": (None, None), "conv_b": (None,),
+    "A_log": (None,), "D": (None,), "dt_bias": (None,), "norm_w": (None,),
+    # norms
+    "w": (None,), "b": (None,),
+}
+
+_MOE_AXES: Dict[str, Tuple[Optional[str], ...]] = {
+    "w1": ("experts", "fsdp", None),
+    "w3": ("experts", "fsdp", None),
+    "w2": ("experts", "fsdp", None),
+}
+
+
+def _leaf_axes(path: Tuple, leaf) -> Tuple[Optional[str], ...]:
+    names = [getattr(k, "key", getattr(k, "name", None)) for k in path
+             if not hasattr(k, "idx")]
+    name = names[-1] if names else None
+    in_moe = "moe" in names
+    in_stages = any(n in ("stages", "enc_stages") for n in names)
+    if in_moe and name in _MOE_AXES:
+        axes = _MOE_AXES[name]
+    elif name in _PARAM_AXES:
+        axes = _PARAM_AXES[name]
+    else:
+        axes = (None,) * leaf.ndim
+    lead = leaf.ndim - len(axes)
+    if in_stages and lead >= 1:
+        axes = ("layers",) * lead + axes
+    elif lead > 0:
+        axes = (None,) * lead + axes
+    if len(axes) != leaf.ndim:
+        axes = (None,) * leaf.ndim
+    return axes
+
+
+def arch_rules(cfg: ModelConfig, mesh: Mesh, shape_kind: str = "train",
+               seq_shard_carry: bool = False) -> Dict[str, Any]:
+    """Per-(arch, shape) logical->physical rules."""
+    rules = dict(DEFAULT_RULES)
+    tp = mesh.shape.get("model", 1)
+    # attention TP only when head counts divide (replicated otherwise)
+    if cfg.n_heads % max(tp, 1) != 0:
+        rules["qkv"] = None
+    if cfg.n_kv_heads % max(tp, 1) != 0:
+        rules["kv_qkv"] = None
+    else:
+        rules["kv_qkv"] = "model"
+    if cfg.mla is not None:
+        # MLA q/kv up-projections are (lora, H*dim): shard over heads dim
+        rules["qkv"] = "model" if cfg.n_heads % max(tp, 1) == 0 else None
+    if shape_kind in ("decode", "prefill"):
+        # none of the assigned archs' kv-head counts divide a 16-way model
+        # axis, so the cache's big axis is SEQUENCE: shard it over model
+        # (split-KV attention; XLA combines the partial softmaxes)
+        rules["kv_seq"] = "model"
+    if shape_kind == "decode" and seq_shard_carry:
+        # long-context (batch=1): data is idle too — put it on the sequence
+        rules["kv_seq"] = ("data", "model")
+        rules["batch"] = None
+    return rules
+
+
+def params_shardings(cfg: ModelConfig, params_abstract, mesh: Mesh,
+                     rules: Dict[str, Any]):
+    """Pytree of NamedShardings matching params_abstract."""
+    with use_mesh(mesh, rules):
+        def one(path, leaf):
+            axes = _leaf_axes(path, leaf)
+            return NamedSharding(mesh, logical_to_physical(axes, leaf.shape))
+        return jax.tree_util.tree_map_with_path(one, params_abstract)
+
+
+def batch_shardings(batch_abstract, mesh: Mesh, rules: Dict[str, Any]):
+    with use_mesh(mesh, rules):
+        def one(path, leaf):
+            name = getattr(path[-1], "key", None)
+            if name == "positions3":
+                axes = (None, "batch", None)
+            elif leaf.ndim == 2:
+                axes = ("batch", None)
+            else:
+                axes = ("batch",) + (None,) * (leaf.ndim - 1)
+            return NamedSharding(mesh, logical_to_physical(axes, leaf.shape))
+        return jax.tree_util.tree_map_with_path(one, batch_abstract)
+
+
+_CACHE_AXES: Dict[str, Tuple[Optional[str], ...]] = {
+    # stacked over the stage's repeat dim ("layers") by stage_cache
+    "k": ("layers", "batch", "kv_seq", "kv_heads", None),
+    "v": ("layers", "batch", "kv_seq", "kv_heads", None),
+    "ckv": ("layers", "batch", "kv_seq", None),
+    "krope": ("layers", "batch", "kv_seq", None),
+    "ssm": ("layers", "batch", "heads", None, None),
+    "conv": ("layers", "batch", None, None),
+    "len": ("layers",),
+    "enc_out": ("batch", None, None),
+}
+
+
+def cache_shardings(cache_abstract, mesh: Mesh, rules: Dict[str, Any]):
+    """KV caches: (layers, B, S, H, D) / (layers, B, S, C) / ssm states."""
+    with use_mesh(mesh, rules):
+        def one(path, leaf):
+            names = [getattr(k, "key", getattr(k, "name", None))
+                     for k in path]
+            name = next((n for n in reversed(names) if n in _CACHE_AXES),
+                        None)
+            axes = _CACHE_AXES.get(name, (None,) * leaf.ndim)
+            if len(axes) != leaf.ndim:
+                axes = (None,) * leaf.ndim
+            return NamedSharding(mesh, logical_to_physical(axes, leaf.shape))
+        return jax.tree_util.tree_map_with_path(one, cache_abstract)
+
+
+def opt_state_shardings(opt_abstract, params_shard_tree, mesh: Mesh):
+    """m/v/master inherit the param shardings; step is replicated."""
+    def like(p_sh):
+        return p_sh
+
+    return {
+        "step": NamedSharding(mesh, P()),
+        "master": jax.tree.map(like, params_shard_tree),
+        "m": jax.tree.map(like, params_shard_tree),
+        "v": jax.tree.map(like, params_shard_tree),
+    }

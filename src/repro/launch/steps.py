@@ -1,0 +1,75 @@
+"""jit-able train / prefill / decode step factories shared by the trainer,
+the server, and the dry-run."""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model import LM
+from repro.optim.adamw import AdamWConfig, apply_updates, init_state
+
+
+def make_train_step(model: LM, opt_cfg: AdamWConfig,
+                    microbatches: int = 1) -> Callable:
+    """(params, opt_state, batch) -> (params, opt_state, metrics).
+
+    With microbatches > 1, gradients are accumulated over a scan of
+    microbatch slices (grad-accumulation in fp32 of the grad dtype)."""
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def step(params, opt_state, batch):
+        if microbatches == 1:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        else:
+            def split(path, x):
+                name = getattr(path[-1], "key", None)
+                ax = 1 if name == "positions3" else 0  # (3, B, S) batch axis
+                n = x.shape[ax] // microbatches
+                moved = jnp.moveaxis(x, ax, 0)
+                split_ = moved.reshape((microbatches, n) + moved.shape[1:])
+                return jnp.moveaxis(split_, 1, ax + 1)
+
+            mb = jax.tree_util.tree_map_with_path(split, batch)
+
+            def acc(carry, b):
+                tot, g = carry
+                l, gi = jax.value_and_grad(loss_fn)(params, b)
+                return (tot + l, jax.tree.map(jnp.add, g, gi)), None
+
+            from repro.models import runtime_flags
+            zero = jax.tree.map(jnp.zeros_like, params)
+            (loss, grads), _ = jax.lax.scan(
+                acc, (jnp.zeros((), jnp.float32), zero), mb,
+                unroll=runtime_flags.scan_unroll_arg(microbatches))
+            loss = loss / microbatches
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+        new_params, new_state, metrics = apply_updates(params, grads,
+                                                       opt_state, opt_cfg)
+        metrics["loss"] = loss
+        return new_params, new_state, metrics
+
+    return step
+
+
+def make_prefill_step(model: LM, s_max: int) -> Callable:
+    def step(params, batch):
+        return model.prefill(params, batch, s_max)
+    return step
+
+
+def make_decode_step(model: LM) -> Callable:
+    def step(params, cache, batch):
+        return model.decode_step(params, cache, batch)
+    return step
+
+
+def abstract_train_state(model: LM, opt_cfg: AdamWConfig
+                         ) -> Tuple[Any, Any]:
+    params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    opt = jax.eval_shape(lambda p: init_state(p, opt_cfg), params)
+    return params, opt

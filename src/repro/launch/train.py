@@ -1,0 +1,136 @@
+"""Training driver: --arch/--shape selectable, fault-tolerant, resumable.
+
+On this container it runs real steps single-device at reduced scale
+(examples/train_100m.py drives it); on a TPU fleet the same entry point runs
+under the production mesh (launch/mesh.py) — the step function, checkpoint
+layout, and data pipeline are identical.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import logging
+import os
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import ckpt as ckpt_lib
+from repro.checkpoint.ckpt import AsyncCheckpointer
+from repro.configs import get_config, get_reduced
+from repro.data.pipeline import DataConfig, batch_kwargs_for, synthetic_batch
+from repro.launch import shardings as sh
+from repro.launch.steps import make_train_step
+from repro.models.model import build_model
+from repro.optim.adamw import AdamWConfig, init_state
+from repro.runtime.fault_tolerance import (FaultConfig, StragglerMonitor,
+                                           run_with_recovery)
+from repro.sharding import use_mesh
+
+log = logging.getLogger("repro.train")
+
+
+def train(arch: str, *, steps: int = 100, seq_len: int = 256,
+          global_batch: int = 8, reduced: bool = True,
+          ckpt_dir: Optional[str] = None, checkpoint_every: int = 50,
+          mesh=None, rules: Optional[Dict] = None, lr: float = 3e-4,
+          microbatches: int = 1, log_every: int = 10,
+          failure_injector=None, seed: int = 0,
+          remat_policy: str = "none") -> Dict[str, Any]:
+    """Returns final metrics dict.  Deterministic given (arch, seed, steps)."""
+    cfg = get_reduced(arch) if reduced else get_config(arch)
+    model = build_model(cfg, attn_impl="chunked", remat_policy=remat_policy,
+                        loss_chunk=2048)
+    opt_cfg = AdamWConfig(lr=lr, warmup_steps=min(20, steps // 5 + 1),
+                          total_steps=steps)
+    data_cfg = DataConfig(seq_len=seq_len, global_batch=global_batch,
+                          vocab_size=cfg.vocab_size, seed=seed)
+    bkw = batch_kwargs_for(cfg)
+
+    params = model.init(jax.random.PRNGKey(seed))
+    opt_state = init_state(params, opt_cfg)
+    step_fn = jax.jit(make_train_step(model, opt_cfg,
+                                      microbatches=microbatches),
+                      donate_argnums=(0, 1))
+
+    saver = AsyncCheckpointer(ckpt_dir, keep=3) if ckpt_dir else None
+    monitor = StragglerMonitor(n_hosts=1, cfg=FaultConfig())
+    history = []
+
+    def one_step(step: int, state):
+        params, opt_state = state
+        batch = synthetic_batch(data_cfg, step, **bkw)
+        t0 = time.time()
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        metrics = {k: float(v) for k, v in metrics.items()}
+        dt = time.time() - t0
+        monitor.record(0, dt)
+        if step % log_every == 0 or step == steps - 1:
+            log.info("step %4d loss=%.4f lr=%.2e gnorm=%.3f %.2fs",
+                     step, metrics["loss"], metrics["lr"],
+                     metrics["grad_norm"], dt)
+            history.append({"step": step, **metrics, "sec": dt})
+        return params, opt_state
+
+    def save_fn(step: int, state):
+        if saver is not None:
+            saver.save_async(step, {"params": state[0], "opt": state[1]},
+                             extra={"arch": arch, "seed": seed})
+
+    def restore_fn():
+        if not ckpt_dir:
+            return None
+        last = ckpt_lib.latest_step(ckpt_dir)
+        if last is None:
+            return None
+        like = {"params": params, "opt": opt_state}
+        tree, _ = ckpt_lib.restore(ckpt_dir, last, like)
+        return last, (tree["params"], tree["opt"])
+
+    fault_cfg = FaultConfig(checkpoint_every=checkpoint_every)
+    ctx = use_mesh(mesh, rules or {}) if mesh is not None else _null_ctx()
+    with ctx:
+        result = run_with_recovery(one_step, (params, opt_state), steps,
+                                   fault_cfg, save_fn, restore_fn,
+                                   failure_injector=failure_injector)
+    if saver is not None:
+        saver.wait()
+    return {"history": history, "steps_done": result.steps_done,
+            "failures": result.failures,
+            "final_loss": history[-1]["loss"] if history else None}
+
+
+class _null_ctx:
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *a):
+        return False
+
+
+def main() -> None:
+    logging.basicConfig(level=logging.INFO,
+                        format="%(asctime)s %(name)s %(message)s")
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--full", action="store_true",
+                    help="full-size config (TPU fleet); default reduced")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--microbatches", type=int, default=1)
+    args = ap.parse_args()
+    out = train(args.arch, steps=args.steps, seq_len=args.seq_len,
+                global_batch=args.global_batch, reduced=not args.full,
+                ckpt_dir=args.ckpt_dir, lr=args.lr,
+                microbatches=args.microbatches)
+    print(json.dumps({k: v for k, v in out.items() if k != "history"}))
+
+
+if __name__ == "__main__":
+    main()

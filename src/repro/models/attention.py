@@ -1,0 +1,348 @@
+"""Attention blocks: GQA/MQA, DeepSeek MLA, cross-attention; KV caching.
+
+Three compute paths:
+  * ``ref``     — full-score einsum (smoke-test scale oracle)
+  * ``chunked`` — lax.scan over query blocks, O(block*S) score memory; this is
+                  what train/prefill lower in the dry-run (differentiable,
+                  XLA-fusable, shardable)
+  * ``pallas``  — kernels/flash_attention on TPU (selected by ops.py backend
+                  check; numerically validated against ``ref`` in tests)
+
+Cache contract: dict(k=(B, S_max, Hkv, Dh), v=..., len=int32 scalar); decode
+writes the new token at position ``len`` and attends to [0, len].
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import (dense_init, mrope_apply, norm, norm_init,
+                                 rope_apply)
+
+Array = jax.Array
+
+DEFAULT_Q_CHUNK = 256
+DEFAULT_Q_CHUNK_OVERRIDE = None  # set by the dry-run perf iterations
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg: ModelConfig, dtype, cross: bool = False) -> dict:
+    d, h, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    if cfg.mla is not None and not cross:
+        m = cfg.mla
+        ks = jax.random.split(key, 6)
+        return {
+            "wq_a": dense_init(ks[0], d, m.q_lora_rank, dtype),
+            "q_norm": norm_init(m.q_lora_rank, "rmsnorm", dtype),
+            "wq_b": dense_init(ks[1], m.q_lora_rank,
+                               h * (m.qk_nope_head_dim + m.qk_rope_head_dim),
+                               dtype),
+            "wkv_a": dense_init(ks[2], d, m.kv_lora_rank + m.qk_rope_head_dim,
+                                dtype),
+            "kv_norm": norm_init(m.kv_lora_rank, "rmsnorm", dtype),
+            "wkv_b": dense_init(ks[3], m.kv_lora_rank,
+                                h * (m.qk_nope_head_dim + m.v_head_dim), dtype),
+            "wo": dense_init(ks[4], h * m.v_head_dim, d, dtype),
+        }
+    ks = jax.random.split(key, 4)
+    p = {"wq": dense_init(ks[0], d, h * hd, dtype),
+         "wk": dense_init(ks[1], d, hkv * hd, dtype),
+         "wv": dense_init(ks[2], d, hkv * hd, dtype),
+         "wo": dense_init(ks[3], h * hd, d, dtype)}
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((h * hd,), dtype)
+        p["bk"] = jnp.zeros((hkv * hd,), dtype)
+        p["bv"] = jnp.zeros((hkv * hd,), dtype)
+    return p
+
+
+def make_kv_cache(cfg: ModelConfig, batch: int, s_max: int, dtype) -> dict:
+    if cfg.mla is not None:
+        m = cfg.mla
+        return {"ckv": jnp.zeros((batch, s_max, m.kv_lora_rank), dtype),
+                "krope": jnp.zeros((batch, s_max, m.qk_rope_head_dim), dtype),
+                "len": jnp.zeros((), jnp.int32)}
+    return {"k": jnp.zeros((batch, s_max, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "v": jnp.zeros((batch, s_max, cfg.n_kv_heads, cfg.head_dim), dtype),
+            "len": jnp.zeros((), jnp.int32)}
+
+
+# ---------------------------------------------------------------------------
+# core attention math (q: (B,S,H,D) already rotated)
+# ---------------------------------------------------------------------------
+
+def _sdpa(q: Array, k: Array, v: Array, *, causal: bool, kv_len,
+          q_offset, scale: float, impl: str,
+          q_chunk: int = 0) -> Array:
+    """q (B,Sq,H,D); k/v (B,Skv,Hkv,D); kv_len: valid kv prefix (dynamic ok);
+    q_offset: global position of q[0] (dynamic ok).  Returns (B,Sq,H,D)."""
+    if q_chunk == 0:
+        q_chunk = DEFAULT_Q_CHUNK_OVERRIDE or DEFAULT_Q_CHUNK
+    b, sq, hq, dh = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]                      # may differ from dh (MLA)
+    group = hq // hkv
+    # bf16 operands + f32 accumulation: no materialized f32 copies of q/k/v
+    # (matches MXU practice; softmax stats stay f32)
+    kf, vf = k, v
+    # fold GQA: (B,S,Hkv,group,D)
+    qg = q.reshape(b, sq, hkv, group, dh)
+
+    def block(qb, q_pos):
+        # qb (B,bq,Hkv,g,D); scores (B,Hkv,g,bq,Skv)
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qb, kf,
+                       preferred_element_type=jnp.float32) * scale
+        kpos = jnp.arange(skv)
+        valid = kpos[None, :] < kv_len
+        if causal:
+            valid = valid & (kpos[None, :] <= (q_pos + q_offset)[:, None])
+        s = jnp.where(valid[None, None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bhgqk,bkhd->bqhgd", p.astype(kf.dtype), vf,
+                          preferred_element_type=jnp.float32)
+
+    if impl == "tri" and causal and sq == skv:
+        return _sdpa_tri(q, k, v, kv_len=kv_len, scale=scale)
+    if impl == "ref" or sq <= q_chunk:
+        out = block(qg, jnp.arange(sq))
+    else:
+        pad = (-sq) % q_chunk
+        qp = jnp.pad(qg, ((0, 0), (0, pad), (0, 0), (0, 0), (0, 0)))
+        nblk = qp.shape[1] // q_chunk
+        qb = qp.reshape(b, nblk, q_chunk, hkv, group, dh).transpose(
+            1, 0, 2, 3, 4, 5)
+        pos = (jnp.arange(nblk * q_chunk).reshape(nblk, q_chunk))
+
+        def body(_, inp):
+            qx, px = inp
+            return None, block(qx, px)
+
+        # remat: never save the (bq, Skv) score tensors for backward —
+        # recompute per q-block (this recompute IS the flash-attention trick)
+        from repro.models import runtime_flags
+        _, ob = jax.lax.scan(jax.checkpoint(body, prevent_cse=False),
+                             None, (qb, pos),
+                             unroll=runtime_flags.scan_unroll_arg(nblk))
+        out = ob.transpose(1, 0, 2, 3, 4, 5).reshape(
+            b, nblk * q_chunk, hkv, group, dv)[:, :sq]
+    return out.reshape(b, sq, hq, dv).astype(q.dtype)
+
+
+def _sdpa_tri(q: Array, k: Array, v: Array, *, kv_len, scale: float,
+              block: int = 512) -> Array:
+    """Block-triangular causal attention (beyond-paper §Perf optimization).
+
+    Causal attention with sq == skv computed as nb diagonal bands: band d
+    batches the (q-block i, kv-block i-d) pairs for all i >= d into ONE
+    einsum with static shapes, so above-diagonal blocks are never computed —
+    the dot FLOPs are exactly the triangular half (+ the masked diagonal),
+    unlike `where`-masked full-score implementations.  Streaming-softmax
+    merges bands, so score memory stays O(S * block).
+    """
+    b, sq, hq, dh = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    dv = v.shape[-1]
+    assert sq == skv, "triangular path needs square attention"
+    group = hq // hkv
+    pad = (-sq) % block
+    if pad:
+        q = jnp.pad(q, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = sq + pad
+    nb = sp // block
+    from repro.sharding import hint
+    qb = q.reshape(b, nb, block, hkv, group, dh)
+    kb = k.reshape(b, nb, block, hkv, dh)
+    vb = v.reshape(b, nb, block, hkv, dv)
+    qb = hint(qb, "batch", None, None, "kv_heads", None, None)
+    kb = hint(kb, "batch", None, None, "kv_heads", None)
+    vb = hint(vb, "batch", None, None, "kv_heads", None)
+
+    m = jnp.full((b, nb, block, hkv, group), -1e30, jnp.float32)
+    l = jnp.zeros((b, nb, block, hkv, group), jnp.float32)
+    acc = jnp.zeros((b, nb, block, hkv, group, dv), jnp.float32)
+
+    kpos_in = jnp.arange(block)
+    for d in range(nb):
+        qs = qb[:, d:]                          # (b, nb-d, blk, hkv, g, dh)
+        ks = kb[:, :nb - d]
+        vs = vb[:, :nb - d]
+        s = jnp.einsum("bnqhgd,bnkhd->bnqhgk", qs, ks,
+                       preferred_element_type=jnp.float32) * scale
+        # masks: diagonal band is causal-within-block; all bands respect
+        # kv_len (padded tail)
+        kpos = (jnp.arange(nb - d) * block)[None, :, None, None, None, None] \
+            + kpos_in[None, None, None, None, None, :]
+        valid = kpos < kv_len
+        if d == 0:
+            qpos = kpos_in[None, None, :, None, None, None]
+            valid = valid & (kpos_in[None, None, None, None, None, :]
+                             <= qpos)
+        s = jnp.where(valid, s, -1e30)
+        m_new = jnp.maximum(m[:, d:], jnp.max(s, axis=-1).transpose(
+            0, 1, 2, 3, 4))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m[:, d:] - m_new)
+        l = l.at[:, d:].set(l[:, d:] * alpha + p.sum(-1))
+        acc = acc.at[:, d:].set(
+            acc[:, d:] * alpha[..., None]
+            + jnp.einsum("bnqhgk,bnkhd->bnqhgd", p.astype(vs.dtype), vs,
+                         preferred_element_type=jnp.float32))
+        m = m.at[:, d:].set(m_new)
+
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    out = out.reshape(b, sp, hq, dv)[:, :sq]
+    return out.astype(q.dtype)
+
+
+def _positions(cache_len, batch: int, seq: int) -> Array:
+    base = jnp.arange(seq, dtype=jnp.int32)[None, :] + cache_len
+    return jnp.broadcast_to(base, (batch, seq))
+
+
+def _apply_pos(q: Array, k: Array, cfg: ModelConfig, positions: Array,
+               positions3: Optional[Array]) -> Tuple[Array, Array]:
+    if cfg.pos_emb == "rope":
+        q = rope_apply(q, positions, cfg.rope_theta, cfg.rope_fraction)
+        k = rope_apply(k, positions, cfg.rope_theta, cfg.rope_fraction)
+    elif cfg.pos_emb == "mrope":
+        p3 = positions3 if positions3 is not None else jnp.broadcast_to(
+            positions[None], (3,) + positions.shape)
+        q = mrope_apply(q, p3, cfg.rope_theta, cfg.mrope_sections)
+        k = mrope_apply(k, p3, cfg.rope_theta, cfg.mrope_sections)
+    return q, k
+
+
+# ---------------------------------------------------------------------------
+# GQA / MQA attention
+# ---------------------------------------------------------------------------
+
+def gqa_forward(params: dict, x: Array, cfg: ModelConfig, *,
+                causal: bool = True, cache: Optional[dict] = None,
+                positions3: Optional[Array] = None,
+                impl: str = "chunked") -> Tuple[Array, Optional[dict]]:
+    b, s, d = x.shape
+    h, hkv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + params["bq"], k + params["bk"], v + params["bv"]
+    q = q.reshape(b, s, h, hd)
+    k = k.reshape(b, s, hkv, hd)
+    v = v.reshape(b, s, hkv, hd)
+
+    cache_len = cache["len"] if cache is not None else jnp.zeros((), jnp.int32)
+    pos = _positions(cache_len, b, s)
+    q, k = _apply_pos(q, k, cfg, pos, positions3)
+
+    if cache is not None:
+        kc = jax.lax.dynamic_update_slice(
+            cache["k"], k.astype(cache["k"].dtype), (0, cache_len, 0, 0))
+        vc = jax.lax.dynamic_update_slice(
+            cache["v"], v.astype(cache["v"].dtype), (0, cache_len, 0, 0))
+        new_cache = {"k": kc, "v": vc, "len": cache_len + s}
+        out = _sdpa(q, kc, vc, causal=causal, kv_len=cache_len + s,
+                    q_offset=cache_len, scale=hd ** -0.5, impl=impl)
+    else:
+        new_cache = None
+        out = _sdpa(q, k, v, causal=causal, kv_len=s,
+                    q_offset=jnp.zeros((), jnp.int32), scale=hd ** -0.5,
+                    impl=impl)
+    return out.reshape(b, s, h * hd) @ params["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# DeepSeek MLA
+# ---------------------------------------------------------------------------
+
+def mla_forward(params: dict, x: Array, cfg: ModelConfig, *,
+                causal: bool = True, cache: Optional[dict] = None,
+                impl: str = "chunked") -> Tuple[Array, Optional[dict]]:
+    m = cfg.mla
+    b, s, d = x.shape
+    h = cfg.n_heads
+    dn, dr, dv = m.qk_nope_head_dim, m.qk_rope_head_dim, m.v_head_dim
+
+    ql = norm(x @ params["wq_a"], params["q_norm"], "rmsnorm", cfg.norm_eps)
+    q = (ql @ params["wq_b"]).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+
+    kv_a = x @ params["wkv_a"]
+    ckv_new = norm(kv_a[..., :m.kv_lora_rank], params["kv_norm"], "rmsnorm",
+                   cfg.norm_eps)
+    krope_new = kv_a[..., m.kv_lora_rank:]                # (B,S,dr) shared
+
+    cache_len = cache["len"] if cache is not None else jnp.zeros((), jnp.int32)
+    pos = _positions(cache_len, b, s)
+    q_rope = rope_apply(q_rope, pos, cfg.rope_theta)
+    krope_new = rope_apply(krope_new[:, :, None, :], pos, cfg.rope_theta
+                           )[:, :, 0, :]
+
+    if cache is not None:
+        ckv = jax.lax.dynamic_update_slice(
+            cache["ckv"], ckv_new.astype(cache["ckv"].dtype), (0, cache_len, 0))
+        krope = jax.lax.dynamic_update_slice(
+            cache["krope"], krope_new.astype(cache["krope"].dtype),
+            (0, cache_len, 0))
+        new_cache = {"ckv": ckv, "krope": krope, "len": cache_len + s}
+        kv_len = cache_len + s
+        q_offset = cache_len
+    else:
+        ckv, krope = ckv_new, krope_new
+        new_cache = None
+        kv_len = jnp.asarray(s, jnp.int32)
+        q_offset = jnp.zeros((), jnp.int32)
+
+    # expand latent kv per head (baseline; absorbed-matmul is a §Perf item)
+    kv = (ckv @ params["wkv_b"]).reshape(b, ckv.shape[1], h, dn + dv)
+    k_nope, vv = kv[..., :dn], kv[..., dn:]
+    # concat rope part (shared across heads) into keys and queries
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(krope[:, :, None, :],
+                                  k_nope.shape[:3] + (dr,))], axis=-1)
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    out = _sdpa(q_full, k_full, vv, causal=causal, kv_len=kv_len,
+                q_offset=q_offset, scale=(dn + dr) ** -0.5, impl=impl)
+    return out.reshape(b, s, h * dv) @ params["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# cross attention (whisper decoder); kv from encoder output, no causal mask
+# ---------------------------------------------------------------------------
+
+def cross_attn_init(key, cfg: ModelConfig, dtype) -> dict:
+    d, h, hd = cfg.d_model, cfg.n_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    return {"wq": dense_init(ks[0], d, h * hd, dtype),
+            "wk": dense_init(ks[1], d, h * hd, dtype),
+            "wv": dense_init(ks[2], d, h * hd, dtype),
+            "wo": dense_init(ks[3], h * hd, d, dtype)}
+
+
+def cross_attn_forward(params: dict, x: Array, enc_out: Array,
+                       cfg: ModelConfig, impl: str = "chunked") -> Array:
+    b, s, d = x.shape
+    h, hd = cfg.n_heads, cfg.head_dim
+    se = enc_out.shape[1]
+    q = (x @ params["wq"]).reshape(b, s, h, hd)
+    k = (enc_out @ params["wk"]).reshape(b, se, h, hd)
+    v = (enc_out @ params["wv"]).reshape(b, se, h, hd)
+    out = _sdpa(q, k, v, causal=False, kv_len=jnp.asarray(se, jnp.int32),
+                q_offset=jnp.zeros((), jnp.int32), scale=hd ** -0.5, impl=impl)
+    return out.reshape(b, s, h * hd) @ params["wo"]
+
+
+def attn_forward(params: dict, x: Array, cfg: ModelConfig, **kw):
+    if cfg.mla is not None:
+        kw.pop("positions3", None)
+        return mla_forward(params, x, cfg, **kw)
+    return gqa_forward(params, x, cfg, **kw)

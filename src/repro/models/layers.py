@@ -1,0 +1,201 @@
+"""Shared layers: norms, activations, dense projections, position encodings."""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32,
+               scale: Optional[float] = None) -> Array:
+    scale = (d_in ** -0.5) if scale is None else scale
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+            ).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: Array, weight: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * weight.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def layernorm(x: Array, weight: Array, bias: Optional[Array],
+              eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps) * weight.astype(jnp.float32)
+    if bias is not None:
+        out = out + bias.astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+def norm(x: Array, params: dict, kind: str, eps: float) -> Array:
+    if kind == "rmsnorm":
+        return rmsnorm(x, params["w"], eps)
+    return layernorm(x, params["w"], params.get("b"), eps)
+
+
+def norm_init(d: int, kind: str, dtype=jnp.float32) -> dict:
+    p = {"w": jnp.ones((d,), dtype)}
+    if kind == "layernorm":
+        p["b"] = jnp.zeros((d,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# MLP activations
+# ---------------------------------------------------------------------------
+
+def mlp_apply(x: Array, params: dict, act: str) -> Array:
+    """Gated (swiglu/geglu: w1=gate, w3=up, w2=down) or plain (gelu: w1, w2)."""
+    if act in ("swiglu", "geglu"):
+        g = x @ params["w1"]
+        u = x @ params["w3"]
+        h = (jax.nn.silu(g) if act == "swiglu" else
+             jax.nn.gelu(g, approximate=True)) * u
+        return h @ params["w2"]
+    h = x @ params["w1"]
+    if "b1" in params:
+        h = h + params["b1"]
+    h = jax.nn.gelu(h, approximate=True)
+    out = h @ params["w2"]
+    if "b2" in params:
+        out = out + params["b2"]
+    return out
+
+
+def mlp_init(key, d: int, d_ff: int, act: str, dtype=jnp.float32,
+             bias: bool = False) -> dict:
+    ks = jax.random.split(key, 3)
+    if act in ("swiglu", "geglu"):
+        return {"w1": dense_init(ks[0], d, d_ff, dtype),
+                "w3": dense_init(ks[1], d, d_ff, dtype),
+                "w2": dense_init(ks[2], d_ff, d, dtype)}
+    p = {"w1": dense_init(ks[0], d, d_ff, dtype),
+         "w2": dense_init(ks[1], d_ff, d, dtype)}
+    if bias:
+        p["b1"] = jnp.zeros((d_ff,), dtype)
+        p["b2"] = jnp.zeros((d,), dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings (RoPE / partial RoPE / M-RoPE)
+# ---------------------------------------------------------------------------
+
+def _rope_freqs(dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, jnp.float32) / dim))
+
+
+def rope_apply(x: Array, positions: Array, theta: float,
+               fraction: float = 1.0) -> Array:
+    """x: (B, S, H, D); positions: (B, S) int32.  Rotates the first
+    `fraction * D` dims (stablelm partial rotary)."""
+    d = x.shape[-1]
+    rot = int(d * fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    freqs = _rope_freqs(rot, theta)                       # (rot/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,rot/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    xr, xp = x[..., :rot], x[..., rot:]
+    x1, x2 = xr[..., ::2], xr[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    out = jnp.stack([o1, o2], axis=-1).reshape(xr.shape)
+    return jnp.concatenate([out.astype(x.dtype), xp], axis=-1)
+
+
+def mrope_apply(x: Array, positions3: Array, theta: float,
+                sections: Tuple[int, ...]) -> Array:
+    """Qwen2-VL multimodal RoPE.  positions3: (3, B, S) — temporal/h/w ids.
+    `sections` splits the half-dim freq bands among the three axes."""
+    d = x.shape[-1]
+    half = d // 2
+    assert sum(sections) == half, (sections, half)
+    freqs = _rope_freqs(d, theta)                         # (half,)
+    # per-band position selection
+    band_axis = jnp.concatenate([
+        jnp.full((s,), i, jnp.int32) for i, s in enumerate(sections)])
+    # positions per element of the half-dim: (B, S, half)
+    pos = jnp.take(positions3.astype(jnp.float32),
+                   band_axis, axis=0)                     # (half, B, S)
+    pos = jnp.moveaxis(pos, 0, -1)                        # (B, S, half)
+    ang = pos * freqs
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., ::2], x[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    return jnp.stack([o1, o2], axis=-1).reshape(x.shape).astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int) -> Array:
+    pos = jnp.arange(seq, jnp.float32)[:, None]
+    freqs = _rope_freqs(d, 10_000.0)[None, :]
+    ang = pos * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# chunked cross-entropy (vocab-sharded-friendly, bounded logit memory)
+# ---------------------------------------------------------------------------
+
+def chunked_softmax_xent(h: Array, emb_out: Array, labels: Array,
+                         chunk: int = 4096,
+                         logit_softcap: float = 0.0) -> Array:
+    """Mean next-token CE over (B,S,d) hidden states without materializing
+    the full (tokens, vocab) logits: scans *sequence* chunks so the batch
+    axis stays sharded, and remats the body so the fp32 logits of one chunk
+    are the only transient (never saved for backward).  label = -100 entries
+    are masked."""
+    b, s, d = h.shape
+    chunk = min(chunk, s)
+    pad = (-s) % chunk
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)), constant_values=-100)
+    nch = (s + pad) // chunk
+    hc = h.reshape(b, nch, chunk, d).swapaxes(0, 1)       # (nch, B, chunk, d)
+    lc = labels.reshape(b, nch, chunk).swapaxes(0, 1)
+
+    def body(carry, inp):
+        tot, cnt = carry
+        hx, lx = inp                                      # (B, chunk, d)
+        logits = (hx @ emb_out).astype(jnp.float32)       # (B, chunk, vocab)
+        if logit_softcap > 0:
+            logits = logit_softcap * jnp.tanh(logits / logit_softcap)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        tgt = jnp.take_along_axis(
+            logits, jnp.clip(lx, 0)[..., None], axis=-1)[..., 0]
+        mask = (lx >= 0).astype(jnp.float32)
+        tot = tot + jnp.sum((lse - tgt) * mask)
+        cnt = cnt + jnp.sum(mask)
+        return (tot, cnt), None
+
+    from repro.models import runtime_flags
+    (tot, cnt), _ = jax.lax.scan(
+        jax.checkpoint(body, prevent_cse=False),
+        (jnp.float32(0), jnp.float32(0)), (hc, lc),
+        unroll=runtime_flags.scan_unroll_arg(nch))
+    return tot / jnp.maximum(cnt, 1.0)

@@ -1,0 +1,125 @@
+"""Mamba-2 (SSD) block: in_proj -> depthwise causal conv -> SSD -> gated out.
+
+Used standalone (mamba2-780m) and interleaved with attention (jamba).
+Decode carries (conv window, ssm state) — O(1) per token in context length,
+which is why the SSM archs run the long_500k cell.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd.ops import ssd, ssd_decode_step
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, rmsnorm
+
+Array = jax.Array
+
+
+def mamba_init(key, cfg: ModelConfig, dtype) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    g, n, h = s.n_groups, s.d_state, s.n_heads(d)
+    conv_ch = di + 2 * g * n
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di + 2 * g * n + h, dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_kernel, conv_ch),
+                                     jnp.float32) * 0.2).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.zeros((h,), jnp.float32),     # A = -exp(A_log) = -1
+        "D": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm_w": jnp.ones((di,), dtype),
+        "out_proj": dense_init(ks[2], di, d, dtype),
+    }
+
+
+def make_ssm_cache(cfg: ModelConfig, batch: int, dtype) -> dict:
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    g, n, h = s.n_groups, s.d_state, s.n_heads(d)
+    conv_ch = di + 2 * g * n
+    return {"conv": jnp.zeros((batch, s.conv_kernel - 1, conv_ch), dtype),
+            "ssm": jnp.zeros((batch, h, n, s.head_dim), jnp.float32),
+            "len": jnp.zeros((), jnp.int32)}
+
+
+def _split_proj(z_all: Array, cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.d_inner(d)
+    g, n, h = s.n_groups, s.d_state, s.n_heads(d)
+    zs = jnp.split(z_all, [di, 2 * di, 2 * di + g * n, 2 * di + 2 * g * n],
+                   axis=-1)
+    z, xc, bc, cc, dt = zs
+    return z, xc, bc, cc, dt, (di, g, n, h)
+
+
+def _causal_conv(seq: Array, w: Array, b: Array,
+                 state: Optional[Array]) -> Tuple[Array, Array]:
+    """Depthwise causal conv over (B, S, C); returns (out, new window)."""
+    kk = w.shape[0]
+    if state is None:
+        state = jnp.zeros((seq.shape[0], kk - 1, seq.shape[2]), seq.dtype)
+    full = jnp.concatenate([state, seq], axis=1)          # (B, K-1+S, C)
+    stacked = jnp.stack(
+        [full[:, i:i + seq.shape[1], :] for i in range(kk)], axis=2)
+    out = jnp.einsum("bskc,kc->bsc", stacked, w) + b
+    new_state = full[:, -(kk - 1):, :]
+    return jax.nn.silu(out), new_state
+
+
+def mamba_forward(params: dict, x: Array, cfg: ModelConfig, *,
+                  cache: Optional[dict] = None
+                  ) -> Tuple[Array, Optional[dict]]:
+    """x (B, S, d) -> (out (B, S, d), cache').  cache given => stateful."""
+    s_cfg = cfg.ssm
+    b, s, d = x.shape
+    z, xc, bc, cc, dt_raw, (di, g, n, h) = _split_proj(
+        x @ params["in_proj"], cfg)
+    conv_in = jnp.concatenate([xc, bc, cc], axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    conv_out, new_conv = _causal_conv(conv_in, params["conv_w"],
+                                      params["conv_b"], conv_state)
+    xc = conv_out[..., :di]
+    bc = conv_out[..., di:di + g * n]
+    cc = conv_out[..., di + g * n:]
+
+    p = s_cfg.head_dim
+    xh = xc.reshape(b, s, h, p)
+    # groups broadcast to heads (n_groups == 1 typical)
+    rep = h // g
+    bh = jnp.repeat(bc.reshape(b, s, g, n), rep, axis=2)
+    ch = jnp.repeat(cc.reshape(b, s, g, n), rep, axis=2)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"])             # (B,S,H)
+    A = -jnp.exp(params["A_log"])                         # (H,)
+
+    if cache is not None and s == 1:
+        hstate, y = ssd_decode_step(
+            cache["ssm"], xh[:, 0].astype(jnp.float32), dt[:, 0], A,
+            bh[:, 0].astype(jnp.float32), ch[:, 0].astype(jnp.float32))
+        y = y[:, None]                                    # (B,1,H,P)
+        new_cache = {"conv": new_conv, "ssm": hstate,
+                     "len": cache["len"] + 1}
+    elif cache is not None:
+        y, hstate = ssd(xh, dt, A, bh, ch, chunk=s_cfg.chunk,
+                        return_final_state=True)
+        new_cache = {"conv": new_conv, "ssm": hstate,
+                     "len": cache["len"] + s}
+    else:
+        y = ssd(xh, dt, A, bh, ch, chunk=s_cfg.chunk)
+        new_cache = None
+
+    y = y + params["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, s, di)
+    # gated RMSNorm (mamba2): norm(y * silu(z))
+    y = rmsnorm((y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype),
+                params["norm_w"], cfg.norm_eps)
+    return y @ params["out_proj"], new_cache

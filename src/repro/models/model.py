@@ -1,0 +1,187 @@
+"""Unified LM API: init / loss / prefill / decode_step for every assigned arch.
+
+Batch dict contract (launch/dryrun.input_specs produces matching
+ShapeDtypeStructs):
+  tokens     (B, S) int32          — unless cfg.embeds_input
+  embeds     (B, S, d)             — vlm/audio backbone stubs
+  labels     (B, S) int32          — train only; -100 = masked
+  frames     (B, n_frames, d)      — whisper encoder stub input
+  positions3 (3, B, S) int32       — qwen2-vl M-RoPE (optional)
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import (chunked_softmax_xent, embed_init, norm,
+                                 norm_init)
+from repro.models.transformer import (plan_stages, stage_cache, stage_forward,
+                                      stage_init)
+from repro.sharding import hint
+
+Array = jax.Array
+
+
+class LM:
+    """Pure-function model bound to a config (params are explicit pytrees)."""
+
+    def __init__(self, cfg: ModelConfig, *, attn_impl: str = "chunked",
+                 remat_policy: str = "full", loss_chunk: int = 4096):
+        self.cfg = cfg
+        self.attn_impl = attn_impl
+        self.remat_policy = remat_policy
+        self.loss_chunk = loss_chunk
+        self.stages = plan_stages(cfg)
+        self._dtype = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+    # ------------------------------------------------------------------ init
+    def init(self, key) -> Dict[str, Any]:
+        cfg = self.cfg
+        dt = self._dtype
+        ks = jax.random.split(key, 8)
+        params: Dict[str, Any] = {
+            "embed": embed_init(ks[0], cfg.vocab_size, cfg.d_model, dt),
+            "final_norm": norm_init(cfg.d_model, cfg.norm, dt),
+        }
+        if not cfg.tie_embeddings:
+            params["lm_head"] = embed_init(ks[1], cfg.vocab_size,
+                                           cfg.d_model, dt)
+        if cfg.pos_emb == "learned":
+            params["pos_embed"] = embed_init(ks[2], cfg.max_seq_len,
+                                             cfg.d_model, dt)
+        params["stages"] = [
+            stage_init(jax.random.fold_in(ks[3], i), cfg, sigs, reps, dt)
+            for i, (sigs, reps) in enumerate(self.stages)]
+        if cfg.encoder is not None:
+            enc_cfg = cfg  # same dims; encoder blocks are non-causal attn
+            params["enc_stages"] = [stage_init(
+                ks[4], enc_cfg, [("attn", False)], cfg.encoder.n_layers, dt)]
+            params["enc_norm"] = norm_init(cfg.d_model, cfg.norm, dt)
+            params["enc_pos"] = embed_init(ks[5], cfg.encoder.n_frames,
+                                           cfg.d_model, dt)
+            # decoder cross-attn params live in the decoder stages
+            params["stages"] = [
+                stage_init(jax.random.fold_in(ks[6], i), cfg, sigs, reps, dt,
+                           cross=True)
+                for i, (sigs, reps) in enumerate(self.stages)]
+        return params
+
+    # ----------------------------------------------------------------- embed
+    def _embed_in(self, params, batch, cache_len) -> Array:
+        cfg = self.cfg
+        if cfg.embeds_input and "embeds" in batch:
+            x = batch["embeds"].astype(self._dtype)
+        else:
+            x = jnp.take(params["embed"], batch["tokens"], axis=0)
+        if cfg.scale_embeddings:
+            x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+        if cfg.pos_emb == "learned":
+            s = x.shape[1]
+            pos = jax.lax.dynamic_slice_in_dim(
+                params["pos_embed"], cache_len, s, axis=0) \
+                if isinstance(cache_len, int) else jax.lax.dynamic_slice(
+                    params["pos_embed"], (cache_len, 0),
+                    (s, cfg.d_model))
+            x = x + pos
+        return hint(x, "batch", "act_seq", "embed")
+
+    def _encode(self, params, frames: Array) -> Array:
+        cfg = self.cfg
+        x = frames.astype(self._dtype) + params["enc_pos"][None, :frames.shape[1]]
+        x, _, _ = stage_forward(
+            params["enc_stages"][0], x, cfg, [("attn", False)], caches=None,
+            enc_out=None, positions3=None, causal=False, impl=self.attn_impl,
+            remat_policy=self.remat_policy)
+        return norm(x, params["enc_norm"], cfg.norm, cfg.norm_eps)
+
+    # --------------------------------------------------------------- forward
+    def _backbone(self, params, x: Array, *, caches, enc_out, positions3,
+                  ) -> Tuple[Array, Optional[List], Array]:
+        cfg = self.cfg
+        aux = jnp.zeros((), jnp.float32)
+        new_caches = [] if caches is not None else None
+        for i, (sigs, reps) in enumerate(self.stages):
+            c = caches[i] if caches is not None else None
+            x, nc, a = stage_forward(
+                params["stages"][i], x, cfg, sigs, caches=c, enc_out=enc_out,
+                positions3=positions3, causal=True, impl=self.attn_impl,
+                remat_policy=self.remat_policy)
+            aux = aux + a
+            if new_caches is not None:
+                new_caches.append(nc)
+        x = norm(x, params["final_norm"], cfg.norm, cfg.norm_eps)
+        return x, new_caches, aux
+
+    def _head(self, params) -> Array:
+        w = params["embed"] if self.cfg.tie_embeddings else params["lm_head"]
+        return w.T  # (d, vocab)
+
+    # ------------------------------------------------------------------ loss
+    def loss(self, params, batch: Dict[str, Array]) -> Array:
+        enc_out = (self._encode(params, batch["frames"])
+                   if self.cfg.encoder is not None else None)
+        x = self._embed_in(params, batch, 0)
+        h, _, aux = self._backbone(params, x, caches=None, enc_out=enc_out,
+                                   positions3=batch.get("positions3"))
+        ce = chunked_softmax_xent(h, self._head(params), batch["labels"],
+                                  chunk=self.loss_chunk,
+                                  logit_softcap=self.cfg.logit_softcap)
+        return ce + aux
+
+    # --------------------------------------------------------------- serving
+    def init_cache(self, batch_size: int, s_max: int) -> Dict[str, Any]:
+        dt = self._dtype
+        return {"stages": [
+            stage_cache(self.cfg, sigs, reps, batch_size, s_max, dt)
+            for (sigs, reps) in self.stages],
+            "enc_out": None}
+
+    def prefill(self, params, batch: Dict[str, Array], s_max: int
+                ) -> Tuple[Dict[str, Any], Array]:
+        """Run the full prompt, fill caches, return (cache, last logits)."""
+        bsz = (batch["embeds"] if self.cfg.embeds_input else
+               batch["tokens"]).shape[0]
+        cache = self.init_cache(bsz, s_max)
+        enc_out = (self._encode(params, batch["frames"])
+                   if self.cfg.encoder is not None else None)
+        cache["enc_out"] = enc_out
+        x = self._embed_in(params, batch, 0)
+        h, new_stage_caches, _ = self._backbone(
+            params, x, caches=cache["stages"], enc_out=enc_out,
+            positions3=batch.get("positions3"))
+        cache["stages"] = new_stage_caches
+        logits = (h[:, -1].astype(jnp.float32) @ self._head(params)
+                  .astype(jnp.float32))
+        return cache, logits
+
+    def decode_step(self, params, cache: Dict[str, Any],
+                    batch: Dict[str, Array]) -> Tuple[Dict[str, Any], Array]:
+        """One token: batch['tokens'] (B,1) (or embeds (B,1,d))."""
+        # cache length lives inside the per-layer caches; embed position uses
+        # the first stage/sub-layer attn cache if present, else ssm len.
+        cache_len = _peek_len(cache["stages"])
+        x = self._embed_in(params, batch, cache_len)
+        h, new_stage_caches, _ = self._backbone(
+            params, x, caches=cache["stages"], enc_out=cache.get("enc_out"),
+            positions3=batch.get("positions3"))
+        cache["stages"] = new_stage_caches
+        logits = (h[:, -1].astype(jnp.float32) @ self._head(params)
+                  .astype(jnp.float32))
+        if self.cfg.logit_softcap > 0:
+            c = self.cfg.logit_softcap
+            logits = c * jnp.tanh(logits / c)
+        return cache, logits
+
+
+def _peek_len(stage_caches) -> Array:
+    leaf = stage_caches[0][0]
+    # scan-stacked cache: take sub-layer 0, repeat 0
+    return leaf["len"][0] if leaf["len"].ndim else leaf["len"]
+
+
+def build_model(cfg: ModelConfig, **kw) -> LM:
+    return LM(cfg, **kw)

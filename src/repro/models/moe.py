@@ -1,0 +1,248 @@
+"""Mixture-of-Experts FFN with RMW-semantics dispatch + expert parallelism.
+
+The token->expert dispatch is the paper's contended-RMW workload (DESIGN.md
+§2): each token's (expert, slot) assignment is a Fetch-and-Add on the
+expert's arrival counter (`core.rmw.arrival_rank`), and the *overflow policy*
+is a choice of RMW semantics:
+
+  * ``swp_drop_newest``     — arrival order wins (SWP: late colliders lose)
+  * ``cas_keep_top_gate``   — gate priority wins (CAS: highest-priority
+                              collider keeps the slot, later/lower fail)
+
+Distribution: experts are sharded over the ``model`` mesh axis (EP); the
+dispatch all_to_all runs inside shard_map.  Expert weights are additionally
+ZeRO-3 sharded over ("pod","data") and all-gathered per layer inside the
+shard (explicit FSDP).  Without a mesh the same routing runs in-process
+(smoke tests).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.core.rmw import arrival_rank
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, mlp_apply, mlp_init
+from repro.sharding import active_mesh
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def moe_init(key, cfg: ModelConfig, dtype) -> dict:
+    m = cfg.moe
+    d, f, e = cfg.d_model, m.d_ff_expert, m.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], d, e, jnp.float32),
+        "w1": (jax.random.normal(ks[1], (e, d, f), jnp.float32)
+               * d ** -0.5).astype(dtype),
+        "w3": (jax.random.normal(ks[2], (e, d, f), jnp.float32)
+               * d ** -0.5).astype(dtype),
+        "w2": (jax.random.normal(ks[3], (e, f, d), jnp.float32)
+               * f ** -0.5).astype(dtype),
+    }
+    if m.n_shared_experts:
+        p["shared"] = mlp_init(ks[4], d, m.d_ff_expert * m.n_shared_experts,
+                               cfg.mlp_act, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# routing with RMW semantics
+# ---------------------------------------------------------------------------
+
+def _route(x2d: Array, router_w: Array, m) -> Tuple[Array, Array, Array]:
+    """Returns (gates (T,k), expert_ids (T,k), aux_loss scalar-parts).
+
+    aux parts returned as (mean_prob_per_expert (E,), counts (E,)) so the
+    caller can psum them across shards before forming the load-balance loss.
+    """
+    logits = (x2d.astype(jnp.float32) @ router_w)           # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, ids = jax.lax.top_k(probs, m.top_k)              # (T, k)
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+    onehot = jax.nn.one_hot(ids[:, 0], m.n_experts, dtype=jnp.float32)
+    counts = onehot.sum(0)                                  # top-1 counts
+    mean_probs = probs.mean(0)
+    return gates, ids, (mean_probs, counts)
+
+
+def _priority_rank(expert_ids: Array, gates: Array, policy: str) -> Array:
+    """Slot rank of each assignment within its expert — the FAA counter.
+
+    swp_drop_newest:    rank by arrival (flattened token order).
+    cas_keep_top_gate:  rank by descending gate (lexsort via double argsort);
+                        the CAS 'winner' is the highest-gate collider.
+    """
+    flat_e = expert_ids.reshape(-1)
+    if policy == "swp_drop_newest":
+        return arrival_rank(flat_e)
+    # ranks are discrete routing decisions: no gradient flows through the
+    # sort (grads reach the router through the gate weights only)
+    flat_g = jax.lax.stop_gradient(gates.reshape(-1))
+    by_gate = jnp.argsort(-flat_g, stable=True)
+    by_expert = jnp.argsort(flat_e[by_gate], stable=True)
+    order = by_gate[by_expert]                  # grouped by expert, gate desc
+    n = flat_e.shape[0]
+    ranks_sorted = arrival_rank(flat_e[order])
+    inv = jnp.zeros((n,), jnp.int32).at[order].set(jnp.arange(n, dtype=jnp.int32))
+    return ranks_sorted[inv]
+
+
+# ---------------------------------------------------------------------------
+# the local (per-shard) dispatch->compute->combine pipeline
+# ---------------------------------------------------------------------------
+
+def _dispatch_compute(x2d: Array, params_local: dict, cfg: ModelConfig,
+                      n_shards: int, capacity: int, axis: Optional[str],
+                      act: str):
+    """x2d: (T, d) local tokens.  params_local hold E_loc experts.  When
+    `axis` is set, runs the EP all_to_all over that mesh axis."""
+    m = cfg.moe
+    t, d = x2d.shape
+    e, e_loc = m.n_experts, m.n_experts // n_shards
+    k = m.top_k
+
+    gates, ids, aux = _route(x2d, params_local["router"], m)
+    flat_ids = ids.reshape(-1)                              # (T*k,)
+    rank = _priority_rank(ids, gates, m.overflow_policy)
+    keep = rank < capacity
+
+    # slot in the send buffer: (dest shard, expert-local row, capacity slot)
+    dest = flat_ids // e_loc
+    e_local = flat_ids % e_loc
+    slot = dest * (e_loc * capacity) + e_local * capacity + rank
+    buf_rows = n_shards * e_loc * capacity
+    slot = jnp.where(keep, slot, buf_rows)                  # scratch row
+    xk = jnp.repeat(x2d, k, axis=0)                         # (T*k, d)
+    send = jnp.zeros((buf_rows + 1, d), x2d.dtype).at[slot].set(xk)[:-1]
+
+    # bf16 wire format for the dispatch when the model runs bf16 (halves
+    # a2a bytes; fp32 smoke/consistency tests keep exact dtype)
+    wire_dt = jnp.bfloat16 if x2d.dtype == jnp.bfloat16 else x2d.dtype
+    if axis is not None:
+        send = send.reshape(n_shards, e_loc * capacity, d).astype(wire_dt)
+        recv = jax.lax.all_to_all(send, axis, split_axis=0, concat_axis=0,
+                                  tiled=False)
+    else:
+        recv = send.reshape(1, e_loc * capacity, d).astype(wire_dt)
+
+    # expert FFN on (n_src, E_loc, C, d)
+    h_in = recv.reshape(n_shards, e_loc, capacity, d)
+    w1, w3, w2 = params_local["w1"], params_local["w3"], params_local["w2"]
+    if act in ("swiglu", "geglu"):
+        g = jnp.einsum("secd,edf->secf", h_in, w1)
+        u = jnp.einsum("secd,edf->secf", h_in, w3)
+        hidden = (jax.nn.silu(g) if act == "swiglu"
+                  else jax.nn.gelu(g, approximate=True)) * u
+    else:
+        hidden = jax.nn.gelu(jnp.einsum("secd,edf->secf", h_in, w1),
+                             approximate=True)
+    out = jnp.einsum("secf,efd->secd", hidden, w2)
+
+    out = out.astype(wire_dt)
+    if axis is not None:
+        back = jax.lax.all_to_all(out.reshape(n_shards, e_loc * capacity, d),
+                                  axis, split_axis=0, concat_axis=0,
+                                  tiled=False)
+    else:
+        back = out.reshape(1, e_loc * capacity, d)
+    back = back.reshape(buf_rows, d)
+    back = jnp.concatenate([back, jnp.zeros((1, d), back.dtype)], axis=0)
+
+    expert_out = back[slot]                                 # (T*k, d)
+    weights = (gates.reshape(-1) * keep).astype(expert_out.dtype)
+    combined = (expert_out * weights[:, None]).reshape(t, k, d).sum(axis=1)
+    return combined, aux
+
+
+def _aux_loss(mean_probs: Array, counts: Array, m) -> Array:
+    total = jnp.maximum(counts.sum(), 1.0)
+    frac = counts / total
+    return m.n_experts * jnp.sum(frac * mean_probs) * m.router_aux_weight
+
+
+# ---------------------------------------------------------------------------
+# public entry
+# ---------------------------------------------------------------------------
+
+def moe_ffn(params: dict, x: Array, cfg: ModelConfig
+            ) -> Tuple[Array, Array]:
+    """x: (B, S, d) -> (out (B,S,d), aux_loss scalar)."""
+    m = cfg.moe
+    mesh = active_mesh()
+    b, s, d = x.shape
+    ep = 1
+    axis = None
+    if mesh is not None and "model" in mesh.shape \
+            and m.n_experts % mesh.shape["model"] == 0 \
+            and mesh.shape["model"] > 1:
+        ep = mesh.shape["model"]
+        axis = "model"
+
+    if axis is None:
+        t = b * s
+        cap = _capacity(t, m, 1)
+        out2d, aux = _dispatch_compute(x.reshape(t, d), params, cfg, 1, cap,
+                                       None, cfg.mlp_act)
+        out = out2d.reshape(b, s, d)
+        loss = _aux_loss(*aux, m)
+    else:
+        dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+        dp_size = _axes_size(mesh, dp_axes)
+        # tiny decode batches can't split over data: replicate instead
+        b_split = dp_size > 1 and b % dp_size == 0
+        # split tokens over the model axis too when seq allows (prefill/train)
+        seq_split = s % ep == 0 and s >= ep
+        x_spec = P(dp_axes if b_split else None,
+                   "model" if seq_split else None, None)
+        b_loc = b // dp_size if b_split else b
+        t_loc = b_loc * (s // ep if seq_split else s)
+        cap = _capacity(t_loc, m, ep)
+        fsdp_spec = dp_axes
+
+        def shard_fn(xs, router, w1, w3, w2):
+            w1 = jax.lax.all_gather(w1, fsdp_spec, axis=1, tiled=True)
+            w3 = jax.lax.all_gather(w3, fsdp_spec, axis=1, tiled=True)
+            w2 = jax.lax.all_gather(w2, fsdp_spec, axis=1, tiled=True)
+            p_local = {"router": router, "w1": w1, "w3": w3, "w2": w2}
+            bl, sl, dl = xs.shape
+            out2d, (mp, cnt) = _dispatch_compute(
+                xs.reshape(bl * sl, dl), p_local, cfg, ep, cap, "model",
+                cfg.mlp_act)
+            mp = jax.lax.pmean(mp, ("model",) + fsdp_spec)
+            cnt = jax.lax.psum(cnt, ("model",) + fsdp_spec)
+            return out2d.reshape(bl, sl, dl), mp, cnt
+
+        out, mp, cnt = jax.shard_map(
+            shard_fn, mesh=mesh,
+            in_specs=(x_spec, P(), P("model", fsdp_spec, None),
+                      P("model", fsdp_spec, None), P("model", fsdp_spec, None)),
+            out_specs=(x_spec, P(), P()),
+            check_vma=False,
+        )(x, params["router"], params["w1"], params["w3"], params["w2"])
+        loss = _aux_loss(mp, cnt, m)
+
+    if m.n_shared_experts:
+        out = out + mlp_apply(x, params["shared"], cfg.mlp_act)
+    return out, loss
+
+
+def _capacity(t_local: int, m, ep: int) -> int:
+    per_expert = t_local * m.top_k / m.n_experts
+    return max(1, int(per_expert * m.capacity_factor + 0.999))
+
+
+def _axes_size(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n

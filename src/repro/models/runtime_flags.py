@@ -1,0 +1,32 @@
+"""Process-wide model-lowering flags (contextvar-scoped).
+
+unroll_scans: the dry-run sets this so every lax.scan lowers unrolled —
+XLA's cost_analysis and the HLO collective parser then count each layer /
+chunk / microbatch exactly once per execution instead of once per program.
+Runtime (train/serve) keeps rolled scans for compile-time and code size.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+_UNROLL = contextvars.ContextVar("repro_unroll_scans", default=False)
+
+
+def unroll_scans() -> bool:
+    return _UNROLL.get()
+
+
+@contextlib.contextmanager
+def set_unroll_scans(value: bool = True):
+    tok = _UNROLL.set(value)
+    try:
+        yield
+    finally:
+        _UNROLL.reset(tok)
+
+
+def scan_unroll_arg(length: int) -> int:
+    """Value for lax.scan's unroll= argument under the current flag."""
+    return max(1, length) if _UNROLL.get() else 1

@@ -1,0 +1,200 @@
+"""Model assembly: blocks -> scanned stages -> unified LM API.
+
+Layer stacks are grouped into *stages* of identical block structure and
+executed with jax.lax.scan over stacked parameters (small HLO, fast compiles,
+remat-friendly).  Heterogeneous-but-periodic schedules (jamba's 1:7
+attn:mamba interleave with MoE every other layer) scan over super-blocks.
+
+Block = token mixer (GQA/MLA attention | Mamba-2 SSD) + channel mixer
+(dense MLP | MoE | none) with pre-norm residuals; optional parallel residual
+(command-r) and cross-attention (whisper decoder).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn_mod
+from repro.models import mamba as mamba_mod
+from repro.models import moe as moe_mod
+from repro.models import runtime_flags
+from repro.models.config import ModelConfig
+from repro.models.layers import (chunked_softmax_xent, embed_init, mlp_apply,
+                                 mlp_init, norm, norm_init)
+from repro.sharding import hint
+
+Array = jax.Array
+
+Sig = Tuple[str, bool]  # (kind: "attn"|"ssm", is_moe)
+
+
+# ---------------------------------------------------------------------------
+# stage planning
+# ---------------------------------------------------------------------------
+
+def plan_stages(cfg: ModelConfig) -> List[Tuple[List[Sig], int]]:
+    """[(sub-layer signatures, repeats)] — scan runs `repeats` iterations,
+    each applying the listed sub-layers in order."""
+    sigs: List[Sig] = [(cfg.layer_kind(i), cfg.layer_is_moe(i))
+                       for i in range(cfg.n_layers)]
+    runs: List[Tuple[Sig, int]] = []
+    for s in sigs:
+        if runs and runs[-1][0] == s:
+            runs[-1] = (s, runs[-1][1] + 1)
+        else:
+            runs.append((s, 1))
+    if len(runs) <= 4:
+        return [([s], c) for s, c in runs]
+    # periodic super-block (jamba): smallest q with sig[i] == sig[i % q]
+    for q in range(2, cfg.n_layers + 1):
+        if cfg.n_layers % q == 0 and all(
+                sigs[i] == sigs[i % q] for i in range(cfg.n_layers)):
+            return [(sigs[:q], cfg.n_layers // q)]
+    return [([s], c) for s, c in runs]
+
+
+# ---------------------------------------------------------------------------
+# single block
+# ---------------------------------------------------------------------------
+
+def block_init(key, cfg: ModelConfig, sig: Sig, dtype,
+               cross: bool = False) -> dict:
+    kind, is_moe = sig
+    ks = jax.random.split(key, 4)
+    p: dict = {"ln1": norm_init(cfg.d_model, cfg.norm, dtype)}
+    if kind == "attn":
+        p["attn"] = attn_mod.attn_init(ks[0], cfg, dtype)
+    else:
+        p["ssm"] = mamba_mod.mamba_init(ks[0], cfg, dtype)
+    if cross:
+        p["ln_cross"] = norm_init(cfg.d_model, cfg.norm, dtype)
+        p["cross"] = attn_mod.cross_attn_init(ks[1], cfg, dtype)
+    if is_moe:
+        p["ln2"] = norm_init(cfg.d_model, cfg.norm, dtype)
+        p["moe"] = moe_mod.moe_init(ks[2], cfg, dtype)
+    elif cfg.d_ff > 0:
+        p["ln2"] = norm_init(cfg.d_model, cfg.norm, dtype)
+        p["mlp"] = mlp_init(ks[2], cfg.d_model, cfg.d_ff, cfg.mlp_act, dtype,
+                            bias=cfg.mlp_bias)
+    return p
+
+
+def block_forward(bp: dict, x: Array, cfg: ModelConfig, sig: Sig, *,
+                  cache: Optional[dict], enc_out: Optional[Array],
+                  positions3: Optional[Array], causal: bool, impl: str
+                  ) -> Tuple[Array, Optional[dict], Array]:
+    kind, is_moe = sig
+    aux = jnp.zeros((), jnp.float32)
+    h = norm(x, bp["ln1"], cfg.norm, cfg.norm_eps)
+
+    if kind == "attn":
+        mix, new_cache = attn_mod.attn_forward(
+            bp["attn"], h, cfg, causal=causal, cache=cache,
+            positions3=positions3, impl=impl)
+    else:
+        mix, new_cache = mamba_mod.mamba_forward(bp["ssm"], h, cfg,
+                                                 cache=cache)
+
+    def channel(inp: Array) -> Array:
+        nonlocal aux
+        if is_moe:
+            out, a = moe_mod.moe_ffn(bp["moe"], inp, cfg)
+            aux = aux + a
+            return out
+        if "mlp" in bp:
+            return mlp_apply(inp, bp["mlp"], cfg.mlp_act)
+        return jnp.zeros_like(inp)
+
+    if cfg.parallel_residual:
+        x = x + mix + channel(h)
+    else:
+        x = x + mix
+        if "cross" in bp:
+            hc = norm(x, bp["ln_cross"], cfg.norm, cfg.norm_eps)
+            x = x + attn_mod.cross_attn_forward(bp["cross"], hc, enc_out, cfg,
+                                                impl=impl)
+        if "ln2" in bp:
+            h2 = norm(x, bp["ln2"], cfg.norm, cfg.norm_eps)
+            x = x + channel(h2)
+    x = hint(x, "batch", "act_seq", "embed")
+    return x, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# stages (scan over stacked params / caches)
+# ---------------------------------------------------------------------------
+
+def stage_init(key, cfg: ModelConfig, sub_sigs: List[Sig], repeats: int,
+               dtype, cross: bool = False) -> List[Any]:
+    """Returns list (per sub-layer) of param trees stacked over repeats."""
+    out = []
+    for j, sig in enumerate(sub_sigs):
+        keys = jax.random.split(jax.random.fold_in(key, j), repeats)
+        ps = [block_init(k, cfg, sig, dtype, cross=cross) for k in keys]
+        out.append(jax.tree.map(lambda *xs: jnp.stack(xs), *ps))
+    return out
+
+
+def stage_cache(cfg: ModelConfig, sub_sigs: List[Sig], repeats: int,
+                batch: int, s_max: int, dtype) -> List[Any]:
+    caches = []
+    for sig in sub_sigs:
+        kind, _ = sig
+        one = (attn_mod.make_kv_cache(cfg, batch, s_max, dtype)
+               if kind == "attn"
+               else mamba_mod.make_ssm_cache(cfg, batch, dtype))
+        caches.append(jax.tree.map(
+            lambda x: jnp.broadcast_to(x, (repeats,) + x.shape), one))
+    return caches
+
+
+def stage_forward(stage_params: List[Any], x: Array, cfg: ModelConfig,
+                  sub_sigs: List[Sig], *, caches: Optional[List[Any]],
+                  enc_out: Optional[Array], positions3: Optional[Array],
+                  causal: bool, impl: str, remat_policy: str
+                  ) -> Tuple[Array, Optional[List[Any]], Array]:
+    have_cache = caches is not None
+
+    def body(carry, xs):
+        xc, aux = carry
+        # keep the saved residual in model dtype: the barrier stops XLA from
+        # hoisting the norm's f32 upcast into the carry stacking buffer
+        # (doubles saved-activation memory otherwise)
+        xc = jax.lax.optimization_barrier(xc)
+        if have_cache:
+            params_j, caches_j = xs
+        else:
+            params_j, caches_j = xs, [None] * len(sub_sigs)
+        new_caches = []
+        for j, sig in enumerate(sub_sigs):
+            xc, nc, a = block_forward(
+                params_j[j], xc, cfg, sig, cache=caches_j[j],
+                enc_out=enc_out, positions3=positions3, causal=causal,
+                impl=impl)
+            new_caches.append(nc)
+            aux = aux + a
+        return (xc, aux), (tuple(new_caches) if have_cache else None)
+
+    body = _remat(body, remat_policy)
+    xs = (tuple(stage_params), tuple(caches)) if have_cache \
+        else tuple(stage_params)
+    reps = jax.tree.leaves(stage_params)[0].shape[0]
+    (x, aux), new_caches = jax.lax.scan(
+        body, (x, jnp.zeros((), jnp.float32)), xs,
+        unroll=runtime_flags.scan_unroll_arg(reps))
+    return x, (list(new_caches) if have_cache else None), aux
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    policies = {
+        "full": None,
+        "dots": jax.checkpoint_policies.checkpoint_dots,
+        "dots_no_batch": jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims,
+    }
+    return jax.checkpoint(fn, policy=policies.get(policy), prevent_cse=False)

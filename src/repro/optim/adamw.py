@@ -1,0 +1,108 @@
+"""Sharded AdamW with fp32 master weights and configurable moment dtype.
+
+ZeRO-3 falls out of sharding: optimizer-state leaves inherit the parameter
+sharding (fsdp x model), so each chip updates only its shard.  For the
+largest assigned models (deepseek-v3-671b, jamba-1.5-large) the moments are
+kept in bf16 (`moment_dtype`) to fit the v5e HBM budget — the memory plan is
+recorded in EXPERIMENTS.md §Dry-run.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"        # "bfloat16" for the >300B models
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+
+
+def schedule(cfg: AdamWConfig, step: Array) -> Array:
+    """Linear warmup + cosine decay to min_lr_ratio."""
+    step = step.astype(jnp.float32)
+    warm = step / jnp.maximum(cfg.warmup_steps, 1)
+    prog = jnp.clip((step - cfg.warmup_steps)
+                    / jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+    cos = cfg.min_lr_ratio + (1 - cfg.min_lr_ratio) * 0.5 * (
+        1 + jnp.cos(jnp.pi * prog))
+    return cfg.lr * jnp.minimum(warm, 1.0) * jnp.where(step < cfg.warmup_steps,
+                                                       1.0, cos)
+
+
+def init_state(params, cfg: AdamWConfig) -> Dict[str, Any]:
+    mdt = jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else jnp.float32
+
+    def zeros_like_m(p):
+        return jnp.zeros(p.shape, mdt)
+
+    # copy=True: astype on an already-f32 leaf would alias the param buffer,
+    # breaking donation (same buffer donated twice in the train step)
+    master = jax.tree.map(lambda p: jnp.array(p, jnp.float32, copy=True),
+                          params)
+    return {"step": jnp.zeros((), jnp.int32),
+            "master": master,
+            "m": jax.tree.map(zeros_like_m, params),
+            "v": jax.tree.map(zeros_like_m, params)}
+
+
+def global_norm(tree) -> Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def apply_updates(params, grads, state, cfg: AdamWConfig
+                  ) -> Tuple[Any, Dict[str, Any], Dict[str, Array]]:
+    """One AdamW step.  Returns (new bf16/compute params, new state, metrics)."""
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if cfg.grad_clip > 0 else jnp.float32(1.0)
+    b1, b2 = cfg.b1, cfg.b2
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mas, m, v):
+        gf = g.astype(jnp.float32) * scale
+        m32 = m.astype(jnp.float32) * b1 + (1 - b1) * gf
+        v32 = v.astype(jnp.float32) * b2 + (1 - b2) * gf * gf
+        mhat = m32 / bc1
+        vhat = v32 / bc2
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        decay = cfg.weight_decay if p.ndim >= 2 else 0.0
+        new_master = mas - lr * (delta + decay * mas)
+        new_p = new_master.astype(p.dtype)
+        if new_p.dtype == new_master.dtype:
+            # keep param/master outputs in distinct buffers (donation safety)
+            new_p = jax.lax.optimization_barrier(new_p)
+        return (new_p, new_master, m32.astype(m.dtype), v32.astype(v.dtype))
+
+    out = jax.tree.map(upd, params, grads, state["master"], state["m"],
+                       state["v"])
+    # unzip the 4-tuples
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_master = jax.tree.map(lambda t: t[1], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_m = jax.tree.map(lambda t: t[2], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_v = jax.tree.map(lambda t: t[3], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+    new_state = {"step": step, "master": new_master, "m": new_m, "v": new_v}
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

@@ -1,0 +1,72 @@
+"""Elastic scaling: reshard a checkpoint onto a different mesh.
+
+The fleet contract (DESIGN.md §7): when a pod is lost (or added), training
+restarts on a new mesh whose `data` (or `pod`) extent changed.  Because
+checkpoints store host arrays + logical metadata, restoring is a pure
+device_put under the *new* mesh's shardings — no resharding collectives, no
+dependence on the writer's topology.  The deterministic data pipeline then
+resumes from the checkpointed step with the new shard count.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding
+
+from repro.checkpoint import ckpt as ckpt_lib
+from repro.launch import shardings as sh
+from repro.models.config import ModelConfig
+from repro.sharding import use_mesh
+
+
+def reshard_restore(ckpt_dir: str, step: int, like: Any, cfg: ModelConfig,
+                    new_mesh: Mesh, rules: Optional[Dict] = None,
+                    shape_kind: str = "train"):
+    """Restore `like`-structured state under `new_mesh` shardings.
+
+    `like` must contain a "params" entry (model parameters); every params
+    leaf gets its divisibility-aware NamedSharding computed against the NEW
+    mesh; other entries ("opt" moments/master) inherit the param shardings
+    leaf-wise where shapes match, else replicate.
+    """
+    rules = rules if rules is not None else sh.arch_rules(cfg, new_mesh,
+                                                          shape_kind)
+    with use_mesh(new_mesh, rules):
+        params_abs = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), like["params"])
+        params_sh = sh.params_shardings(cfg, params_abs, new_mesh, rules)
+        shard_by_shape: Dict[tuple, Any] = {}
+        for leaf, s in zip(jax.tree.leaves(params_abs),
+                           jax.tree.leaves(params_sh)):
+            shard_by_shape.setdefault((leaf.shape, str(leaf.dtype)), s)
+
+        flat_like, _ = jax.tree_util.tree_flatten(like)
+        flat_sh = []
+        for leaf in flat_like:
+            key = (leaf.shape, str(leaf.dtype))
+            alt = (leaf.shape, "float32")  # fp32 master of a bf16 param
+            s = shard_by_shape.get(key) or shard_by_shape.get(alt)
+            flat_sh.append(s if s is not None
+                           else NamedSharding(new_mesh,
+                                              jax.sharding.PartitionSpec()))
+        it = iter(flat_sh)
+
+        def sharding_fn(key, ref):
+            return next(it)
+
+        state, extra = ckpt_lib.restore(ckpt_dir, step, like,
+                                        sharding_fn=sharding_fn)
+    return state, extra
+
+
+def survivors_mesh(axis_sizes: Dict[str, int], lost_data_shards: int = 0):
+    """Build the post-failure mesh: shrink the data axis by the lost shards
+    (straggler/failed hosts are excluded; see runtime.fault_tolerance)."""
+    sizes = dict(axis_sizes)
+    sizes["data"] = sizes.get("data", 1) - lost_data_shards
+    if sizes["data"] < 1:
+        raise ValueError("no data shards left")
+    names = tuple(sizes)
+    return jax.make_mesh(tuple(sizes[n] for n in names), names)

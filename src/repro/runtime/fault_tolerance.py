@@ -1,0 +1,109 @@
+"""Fault tolerance: retrying step executor, straggler detection, elasticity.
+
+On a real multi-pod deployment, chip/host loss surfaces as a Python exception
+from the collective runtime; the recovery sequence is: tear down, re-init the
+mesh (possibly smaller — elastic), restore the latest checkpoint, and resume
+from the checkpointed step (the deterministic data pipeline makes the resume
+bit-exact).  This module implements that state machine; the CPU tests drive
+it with injected failures.
+"""
+
+from __future__ import annotations
+
+import logging
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+log = logging.getLogger("repro.runtime")
+
+
+@dataclass
+class FaultConfig:
+    max_failures: int = 3
+    checkpoint_every: int = 50
+    straggler_window: int = 20
+    straggler_threshold: float = 2.0     # x median step time
+
+
+class StragglerMonitor:
+    """Per-host step-time tracker (paper §5.4 analogue: one slow participant
+    serializes the collective, like one contended owner serializes the RMW).
+
+    flag() returns hosts whose recent mean step time exceeds
+    threshold x fleet median — the launcher reassigns their data shards and
+    excludes them at the next elastic restart.
+    """
+
+    def __init__(self, n_hosts: int, cfg: FaultConfig):
+        self.cfg = cfg
+        self.times: List[List[float]] = [[] for _ in range(n_hosts)]
+
+    def record(self, host: int, seconds: float) -> None:
+        w = self.times[host]
+        w.append(seconds)
+        if len(w) > self.cfg.straggler_window:
+            w.pop(0)
+
+    def flag(self) -> List[int]:
+        means = [sum(w) / len(w) if w else 0.0 for w in self.times]
+        active = sorted(m for m in means if m > 0)
+        if not active:
+            return []
+        median = active[len(active) // 2]
+        return [i for i, m in enumerate(means)
+                if m > self.cfg.straggler_threshold * median]
+
+
+@dataclass
+class RunResult:
+    steps_done: int
+    failures: int
+    restored_from: List[int] = field(default_factory=list)
+
+
+def run_with_recovery(step_fn: Callable[[int, Any], Any],
+                      init_state: Any,
+                      n_steps: int,
+                      cfg: FaultConfig,
+                      save_fn: Callable[[int, Any], None],
+                      restore_fn: Callable[[], Optional[tuple]],
+                      failure_injector: Optional[Callable[[int], None]] = None
+                      ) -> RunResult:
+    """Drive `step_fn(step, state) -> state` with checkpoint/restart recovery.
+
+    `restore_fn() -> (step, state) | None` returns the latest checkpoint.
+    `failure_injector(step)` may raise to simulate chip loss (tests).
+    """
+    state = init_state
+    step = 0
+    failures = 0
+    restored: List[int] = []
+    restored_ck = restore_fn()
+    if restored_ck is not None:
+        step, state = restored_ck
+        restored.append(step)
+        log.info("resumed from checkpoint at step %d", step)
+    while step < n_steps:
+        try:
+            if failure_injector is not None:
+                failure_injector(step)
+            state = step_fn(step, state)
+            step += 1
+            if step % cfg.checkpoint_every == 0 or step == n_steps:
+                save_fn(step, state)
+        except Exception as e:  # noqa: BLE001 — chip loss shows up as generic
+            failures += 1
+            log.warning("step %d failed (%s); recovery %d/%d", step, e,
+                        failures, cfg.max_failures)
+            if failures > cfg.max_failures:
+                raise
+            ck = restore_fn()
+            if ck is None:
+                step, state = 0, init_state
+            else:
+                step, state = ck
+                restored.append(step)
+            time.sleep(0)  # backoff hook
+    return RunResult(steps_done=step, failures=failures,
+                     restored_from=restored)

@@ -1,0 +1,84 @@
+"""Fault tolerance: recovery state machine, determinism, stragglers."""
+
+import pytest
+
+from repro.runtime.fault_tolerance import (FaultConfig, StragglerMonitor,
+                                           run_with_recovery)
+
+
+class Store:
+    """In-memory checkpoint store for the recovery driver."""
+
+    def __init__(self):
+        self.ckpts = {}
+
+    def save(self, step, state):
+        self.ckpts[step] = state
+
+    def restore(self):
+        if not self.ckpts:
+            return None
+        s = max(self.ckpts)
+        return s, self.ckpts[s]
+
+
+def test_recovers_from_injected_failures():
+    store = Store()
+    crashes = {7: 1, 23: 1}   # one-shot crashes at these steps
+
+    def injector(step):
+        if crashes.get(step):
+            crashes[step] -= 1
+            raise RuntimeError(f"chip lost at {step}")
+
+    def step_fn(step, state):
+        return state + 1
+
+    cfg = FaultConfig(max_failures=5, checkpoint_every=5)
+    res = run_with_recovery(step_fn, 0, 30, cfg, store.save, store.restore,
+                            failure_injector=injector)
+    assert res.steps_done == 30
+    assert res.failures == 2
+    assert res.restored_from  # resumed from checkpoints, not from scratch
+    # final state must equal an uninterrupted run (determinism contract)
+    assert store.ckpts[30] == 30
+
+
+def test_too_many_failures_raises():
+    store = Store()
+
+    def injector(step):
+        raise RuntimeError("persistent failure")
+
+    cfg = FaultConfig(max_failures=2, checkpoint_every=5)
+    with pytest.raises(RuntimeError):
+        run_with_recovery(lambda s, x: x, 0, 10, cfg, store.save,
+                          store.restore, failure_injector=injector)
+
+
+def test_resume_from_existing_checkpoint():
+    store = Store()
+    store.save(20, 20)
+    res = run_with_recovery(lambda s, x: x + 1, 0, 25,
+                            FaultConfig(checkpoint_every=100),
+                            store.save, store.restore)
+    assert res.steps_done == 25
+    assert res.restored_from == [20]
+    assert store.ckpts[25] == 25
+
+
+def test_straggler_monitor_flags_slow_host():
+    cfg = FaultConfig(straggler_window=5, straggler_threshold=2.0)
+    mon = StragglerMonitor(n_hosts=4, cfg=cfg)
+    for _ in range(5):
+        for h in range(4):
+            mon.record(h, 1.0 if h != 2 else 5.0)
+    assert mon.flag() == [2]
+
+
+def test_straggler_monitor_quiet_when_uniform():
+    mon = StragglerMonitor(n_hosts=3, cfg=FaultConfig())
+    for _ in range(5):
+        for h in range(3):
+            mon.record(h, 1.0)
+    assert mon.flag() == []

@@ -1,0 +1,51 @@
+"""Flash-attention Pallas kernel vs reference: shape/GQA/padding sweeps."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+RNG = np.random.default_rng(11)
+
+CASES = [
+    # (B, Hq, Hkv, Sq, Skv, D, causal, bq, bk)
+    (2, 4, 2, 128, 128, 64, True, 64, 64),
+    (1, 8, 1, 100, 100, 32, True, 64, 64),     # MQA + padding
+    (2, 4, 4, 64, 192, 64, True, 64, 64),      # cached decode-style kv
+    (1, 2, 2, 50, 70, 16, True, 32, 32),
+    (1, 4, 2, 96, 96, 64, False, 32, 64),
+    (1, 3, 3, 33, 47, 8, False, 32, 32),
+    (1, 1, 1, 1, 64, 32, True, 32, 32),        # single-query decode
+]
+
+
+@pytest.mark.parametrize("b,hq,hkv,sq,skv,d,causal,bq,bk", CASES)
+def test_attention_matches_ref(b, hq, hkv, sq, skv, d, causal, bq, bk):
+    q = jnp.asarray(RNG.normal(size=(b, hq, sq, d)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(b, hkv, skv, d)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(b, hkv, skv, d)), jnp.float32)
+    got = attention(q, k, v, causal=causal, block_q=bq, block_k=bk)
+    want = attention_ref(q, k, v, causal=causal)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)
+
+
+def test_bf16_tolerance():
+    q = jnp.asarray(RNG.normal(size=(1, 4, 64, 64)), jnp.bfloat16)
+    k = jnp.asarray(RNG.normal(size=(1, 2, 64, 64)), jnp.bfloat16)
+    v = jnp.asarray(RNG.normal(size=(1, 2, 64, 64)), jnp.bfloat16)
+    got = attention(q, k, v, causal=True, block_q=32, block_k=32)
+    want = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_scale_override():
+    q = jnp.asarray(RNG.normal(size=(1, 2, 32, 16)), jnp.float32)
+    k = jnp.asarray(RNG.normal(size=(1, 2, 32, 16)), jnp.float32)
+    v = jnp.asarray(RNG.normal(size=(1, 2, 32, 16)), jnp.float32)
+    got = attention(q, k, v, causal=False, scale=0.5, block_q=32, block_k=32)
+    want = attention_ref(q, k, v, causal=False, scale=0.5)
+    np.testing.assert_allclose(got, want, rtol=3e-5, atol=3e-5)

@@ -1,0 +1,66 @@
+"""Pallas RMW kernel vs pure-jnp oracle: shape/dtype/alignment sweeps."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.rmw.kernel import rmw_table
+from repro.kernels.rmw.ops import histogram, rmw_apply
+from repro.kernels.rmw.ref import histogram_ref, rmw_table_ref
+
+RNG = np.random.default_rng(7)
+
+SWEEP = [
+    # (table, n_ops, table_tile, block)
+    (512, 1024, 512, 1024),
+    (1024, 512, 256, 256),
+    (700, 3000, 512, 1024),     # needs padding
+    (96, 64, 512, 1024),        # tiny, heavy padding
+    (4096, 8192, 128, 2048),
+]
+
+
+@pytest.mark.parametrize("op", ["faa", "min", "max", "swp"])
+@pytest.mark.parametrize("m,n,tile,block", SWEEP)
+def test_kernel_matches_ref(op, m, n, tile, block):
+    table = jnp.asarray(RNG.normal(size=m), jnp.float32)
+    idx = jnp.asarray(RNG.integers(0, m + 7, n), jnp.int32)  # some dropped
+    vals = jnp.asarray(RNG.normal(size=n), jnp.float32)
+    got = rmw_apply(table, idx, vals, op, table_tile=tile, block=block)
+    want = rmw_table_ref(table, idx, vals, op)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("tile", [96, 384])  # off the 128-lane grid
+def test_misaligned_tiles_still_correct(tile):
+    """Unaligned tiles cost more (benchmarks/unaligned.py) but stay exact."""
+    table = jnp.asarray(RNG.normal(size=960), jnp.float32)
+    idx = jnp.asarray(RNG.integers(0, 960, 2048), jnp.int32)
+    vals = jnp.asarray(RNG.normal(size=2048), jnp.float32)
+    got = rmw_apply(table, idx, vals, "faa", table_tile=tile, block=512)
+    np.testing.assert_allclose(got, rmw_table_ref(table, idx, vals, "faa"),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_out_of_range_dropped():
+    table = jnp.zeros((128,), jnp.float32)
+    idx = jnp.asarray([0, 127, 128, 10_000], jnp.int32)
+    vals = jnp.ones((4,), jnp.float32)
+    got = rmw_apply(table, idx, vals, "faa", table_tile=128, block=128)
+    assert float(got.sum()) == 2.0
+
+
+def test_direct_kernel_entry_alignment_asserts():
+    with pytest.raises(AssertionError):
+        rmw_table(jnp.zeros((100,), jnp.float32),
+                  jnp.zeros((128,), jnp.int32),
+                  jnp.zeros((128,), jnp.float32), "faa",
+                  table_tile=512, block=128)
+
+
+def test_histogram_is_faa_counter():
+    idx = jnp.asarray(RNG.integers(0, 64, 5000), jnp.int32)
+    got = histogram(idx, 64)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(histogram_ref(idx, 64)))
+    assert float(got.sum()) == 5000

@@ -1,0 +1,117 @@
+"""Perf-model invariants (paper Eq. 1-11) + NRMSE machinery."""
+
+import math
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.perf_model import (TPU_V5E, bandwidth, calibrate,
+                                   cpu_default_spec, ilp_gap, latency,
+                                   read_for_ownership, read_latency,
+                                   relaxed_bandwidth, unaligned_latency)
+from repro.core.placement import Ownership, PlacementState, Tier, shared
+from repro.core.validation import ValidationRow, nrmse, validate
+
+TIERS_ORDERED = (Tier.VREG, Tier.VMEM, Tier.HBM_LOCAL, Tier.ICI_NEIGHBOR,
+                 Tier.DCN_REMOTE_POD)
+
+
+def test_latency_monotone_in_tier():
+    for op in ("cas", "faa", "swp"):
+        ls = [latency(TPU_V5E, op, PlacementState(tier=t))
+              for t in TIERS_ORDERED]
+        assert all(a < b for a, b in zip(ls, ls[1:])), (op, ls)
+
+
+def test_shared_costs_more_than_exclusive():
+    """Paper Eq. (7)/(8): S/O-state acquisition adds the invalidation round."""
+    for t in (Tier.HBM_LOCAL, Tier.ICI_NEIGHBOR):
+        e = read_for_ownership(TPU_V5E, PlacementState(tier=t))
+        s = read_for_ownership(TPU_V5E, shared(t, 4))
+        assert s > e
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(2, 64))
+def test_shared_replicas_sublinear(n):
+    """Invalidations run in parallel (max, not sum): near-flat in replicas."""
+    s2 = read_for_ownership(TPU_V5E, shared(Tier.ICI_NEIGHBOR, 2))
+    sn = read_for_ownership(TPU_V5E, shared(Tier.ICI_NEIGHBOR, n))
+    assert sn <= s2 * (1 + 0.1 * math.log2(n))
+
+
+def test_eq1_composition():
+    """L = R_O + E + O exactly (Eq. 1)."""
+    st_ = PlacementState(tier=Tier.HBM_LOCAL)
+    spec = TPU_V5E.with_residuals({("faa", Tier.HBM_LOCAL): 1e-9})
+    l = latency(spec, "faa", st_)
+    assert l == pytest.approx(read_for_ownership(spec, st_)
+                              + spec.execute_s["faa"] + 1e-9)
+
+
+def test_atomics_comparable_headline():
+    """The paper's headline: CAS ≈ FAA ≈ SWP (within 2x at every tier)."""
+    for t in TIERS_ORDERED:
+        ls = [latency(TPU_V5E, op, PlacementState(tier=t))
+              for op in ("cas", "faa", "swp")]
+        assert max(ls) / min(ls) < 2.0
+
+
+def test_ilp_gap_positive():
+    st_ = PlacementState(tier=Tier.HBM_LOCAL)
+    assert ilp_gap(TPU_V5E, "faa", st_) > 5.0
+    assert relaxed_bandwidth(TPU_V5E, st_) > bandwidth(TPU_V5E, "faa", st_)
+
+
+def test_unaligned_at_least_double():
+    st_ = PlacementState(tier=Tier.HBM_LOCAL)
+    assert unaligned_latency(TPU_V5E, "cas", st_) \
+        >= 2 * latency(TPU_V5E, "cas", st_)
+
+
+def test_read_cheaper_than_rmw():
+    for t in TIERS_ORDERED:
+        st_ = PlacementState(tier=t)
+        assert latency(TPU_V5E, "read", st_) <= latency(TPU_V5E, "faa", st_)
+
+
+def test_calibration_fits_medians():
+    spec0 = cpu_default_spec()
+    reads = {Tier.VREG: [1e-9], Tier.VMEM: [3e-9], Tier.HBM_LOCAL: [50e-9]}
+    rmws = {(op, t): [r[0] + 5e-9] for t, r in reads.items()
+            for op in ("cas", "faa", "swp")}
+    spec = calibrate(spec0, reads, rmws)
+    for t, r in reads.items():
+        assert spec.tier_latency_s[t] == pytest.approx(r[0])
+    for op in ("cas", "faa", "swp"):
+        # E absorbs the uniform 5ns gap minus the streaming term
+        assert 0 <= spec.execute_s[op] <= 5e-9
+        # with residuals, the model reproduces the measurements exactly
+        for t in reads:
+            got = latency(spec, op, PlacementState(tier=t))
+            assert got == pytest.approx(rmws[(op, t)][0], rel=1e-6)
+
+
+def test_nrmse_and_gate():
+    assert nrmse([1.0, 2.0], [1.0, 2.0]) == 0.0
+    with pytest.raises(ValueError):
+        nrmse([1.0], [1.0, 2.0])
+    rows = [ValidationRow("a", 1.0, 1.0), ValidationRow("b", 2.0, 1.0)]
+    rep = validate(rows)
+    assert not rep["passes"] and rep["flagged"] == ["b"]
+
+
+def test_bandwidth_amortization():
+    """Eq. (10): more operands per tile -> higher useful bandwidth."""
+    st_ = PlacementState(tier=Tier.HBM_LOCAL)
+    b8 = bandwidth(TPU_V5E, "faa", st_, operand_bytes=8)
+    b512 = bandwidth(TPU_V5E, "faa", st_, operand_bytes=512)
+    assert b8 > 0 and b512 > 0
+    # fewer ops per tile (bigger operands) -> less per-op overhead
+    assert b512 >= b8
+
+
+def test_read_latency_increases_with_hops():
+    near = read_latency(TPU_V5E, PlacementState(tier=Tier.ICI_FAR, hops=1))
+    far = read_latency(TPU_V5E, PlacementState(tier=Tier.ICI_FAR, hops=7))
+    assert far > near

@@ -1,0 +1,120 @@
+"""Planner + collective model + contention model sanity."""
+
+import math
+
+import pytest
+
+from repro.core.collective_model import (MeshAxis, collective_bytes_on_wire,
+                                         collective_time_s,
+                                         cross_pod_hierarchical,
+                                         grad_sync_strategies)
+from repro.core.contention import (contended_bandwidth_combining,
+                                   contended_bandwidth_serialized,
+                                   hot_expert_capacity)
+from repro.core.perf_model import TPU_V5E
+from repro.core.placement import Tier
+from repro.core.planner import (default_axes, plan_fsdp_gather_dtype,
+                                plan_grad_sync, plan_moe_dispatch)
+
+ICI = MeshAxis("data", 16, Tier.ICI_NEIGHBOR)
+DCN = MeshAxis("pod", 2, Tier.DCN_REMOTE_POD)
+
+
+def test_collective_times_positive_and_ordered():
+    nbytes = 1 << 30
+    ar = collective_time_s(TPU_V5E, "all_reduce", nbytes, ICI)
+    ag = collective_time_s(TPU_V5E, "all_gather", nbytes, ICI)
+    rs = collective_time_s(TPU_V5E, "reduce_scatter", nbytes, ICI)
+    assert ar > ag > 0 and ar > rs > 0
+    assert ar == pytest.approx(ag + rs, rel=1e-6)
+
+
+def test_single_member_axis_free():
+    one = MeshAxis("x", 1, Tier.ICI_NEIGHBOR)
+    assert collective_time_s(TPU_V5E, "all_reduce", 1 << 20, one) == 0.0
+
+
+def test_wire_bytes_formulas():
+    assert collective_bytes_on_wire("all_gather", 1600, 16) == 1500
+    assert collective_bytes_on_wire("all_reduce", 1600, 16) == 3000
+    assert collective_bytes_on_wire("collective_permute", 1600, 16) == 1600
+
+
+def test_unknown_collective_rejected():
+    with pytest.raises(ValueError):
+        collective_time_s(TPU_V5E, "gossip", 10, ICI)
+
+
+def test_grad_sync_zero_beats_nothing():
+    table = grad_sync_strategies(TPU_V5E, 1 << 30, ICI)
+    assert set(table) == {"all_reduce", "zero", "zero_int8"}
+    assert table["zero_int8"] < table["zero"]
+
+
+def test_plan_grad_sync_picks_compressed_or_zero():
+    d = plan_grad_sync(1 << 30, ICI, DCN)
+    assert d.choice in ("zero", "zero_int8")
+    assert d.priced["all_reduce"] > 0
+
+
+def test_plan_fsdp_gather_prefers_bf16():
+    d = plan_fsdp_gather_dtype(1 << 28, ICI)
+    assert d.choice == "bf16"
+    assert d.priced["bf16"] < d.priced["fp32"]
+
+
+def test_hierarchical_cross_pod_shrinks_dcn_leg():
+    """The hierarchical schedule's value: the slow DCN axis carries only
+    1/ici_n of the payload (the ICI RS/AG legs are needed by DP anyway)."""
+    nbytes = 1 << 28
+    dcn_leg_hier = collective_time_s(TPU_V5E, "all_reduce",
+                                     nbytes // ICI.size, DCN)
+    dcn_leg_flat = collective_time_s(TPU_V5E, "all_reduce", nbytes, DCN)
+    assert dcn_leg_hier < dcn_leg_flat / 4
+    # and the composed schedule is never *worse* than ICI legs + flat DCN
+    hier = cross_pod_hierarchical(TPU_V5E, nbytes, ICI, DCN)
+    flat_total = (collective_time_s(TPU_V5E, "reduce_scatter", nbytes, ICI)
+                  + dcn_leg_flat
+                  + collective_time_s(TPU_V5E, "all_gather", nbytes, ICI))
+    assert hier <= flat_total
+
+
+# ------------------------------------------------------------- contention
+
+def test_contended_serialized_collapses():
+    b1 = contended_bandwidth_serialized(TPU_V5E, "faa", 1)
+    b16 = contended_bandwidth_serialized(TPU_V5E, "faa", 16)
+    assert b16 < b1 / 10  # the paper's Fig. 8 collapse
+
+
+def test_combining_scales_then_saturates():
+    b2 = contended_bandwidth_combining(TPU_V5E, "faa", 2)
+    b64 = contended_bandwidth_combining(TPU_V5E, "faa", 64)
+    assert b64 > b2
+
+
+def test_combining_beats_serialized_under_contention():
+    for n in (4, 16, 64):
+        assert contended_bandwidth_combining(TPU_V5E, "faa", n) > \
+            contended_bandwidth_serialized(TPU_V5E, "faa", n)
+
+
+def test_hot_expert_capacity_bounds():
+    cap = hot_expert_capacity(TPU_V5E, tokens_per_step=1 << 20, n_experts=256,
+                              top_k=8, n_writers=16, step_budget_s=1e-3)
+    assert cap >= 1.0
+
+
+def test_plan_moe_dispatch():
+    d = plan_moe_dispatch(tokens_per_step=1 << 20, n_experts=256, top_k=8,
+                          ep_degree=16, step_budget_s=1e-3)
+    assert "capacity_factor" in d.priced
+    assert 1.0 <= d.priced["capacity_factor"] <= 4.0
+    assert d.priced["contended_combining_Bps"] > \
+        d.priced["contended_serialized_Bps"]
+
+
+def test_default_axes():
+    axes = default_axes({"pod": 2, "data": 16, "model": 16})
+    assert axes["pod"].tier == Tier.DCN_REMOTE_POD
+    assert axes["data"].size == 16

@@ -1,0 +1,111 @@
+"""Property tests: the combining RMW is serialized-equivalent (paper core)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.rmw import (arrival_rank, rmw_combining, rmw_serialized,
+                            segmented_scan)
+
+SET = settings(max_examples=30, deadline=None)
+
+
+def batches(max_table=8, max_ops=40, lo=-4, hi=4):
+    return st.tuples(
+        st.integers(1, max_table),
+        st.lists(st.tuples(st.integers(0, max_table - 1),
+                           st.integers(lo, hi)), min_size=1,
+                 max_size=max_ops))
+
+
+@SET
+@given(batches(), st.sampled_from(["faa", "swp", "min", "max"]))
+def test_combining_equals_serialized(batch, op):
+    m, ops = batch
+    idx = jnp.asarray([i % m for i, _ in ops], jnp.int32)
+    vals = jnp.asarray([v for _, v in ops], jnp.int32)
+    table = jnp.arange(m, dtype=jnp.int32) - m // 2
+    a = rmw_serialized(table, idx, vals, op)
+    b = rmw_combining(table, idx, vals, op)
+    np.testing.assert_array_equal(a.table, b.table)
+    np.testing.assert_array_equal(a.fetched, b.fetched)
+    np.testing.assert_array_equal(a.success, b.success)
+
+
+@SET
+@given(batches(max_table=4, lo=-2, hi=2), st.integers(-2, 2))
+def test_cas_uniform_equals_serialized(batch, expected):
+    """Includes the desired==expected chain case (§3.2 success semantics)."""
+    m, ops = batch
+    idx = jnp.asarray([i % m for i, _ in ops], jnp.int32)
+    vals = jnp.asarray([v for _, v in ops], jnp.int32)
+    table = jnp.asarray([(i % 5) - 2 for i in range(m)], jnp.int32)
+    exp_arr = jnp.full((len(ops),), expected, jnp.int32)
+    a = rmw_serialized(table, idx, vals, "cas", exp_arr)
+    b = rmw_combining(table, idx, vals, "cas", jnp.int32(expected))
+    np.testing.assert_array_equal(a.table, b.table)
+    np.testing.assert_array_equal(a.fetched, b.fetched)
+    np.testing.assert_array_equal(a.success, b.success)
+
+
+@SET
+@given(st.lists(st.integers(0, 5), min_size=1, max_size=50))
+def test_arrival_rank_is_faa_fetch(keys):
+    """arrival_rank == fetch results of serialized FAA(counter[key], 1)."""
+    k = jnp.asarray(keys, jnp.int32)
+    counter = jnp.zeros((6,), jnp.int32)
+    ones = jnp.ones((len(keys),), jnp.int32)
+    ser = rmw_serialized(counter, k, ones, "faa")
+    np.testing.assert_array_equal(arrival_rank(k), ser.fetched)
+
+
+@SET
+@given(st.lists(st.integers(-5, 5), min_size=1, max_size=40),
+       st.lists(st.booleans(), min_size=1, max_size=40))
+def test_segmented_scan_matches_loop(vals, flags):
+    n = min(len(vals), len(flags))
+    v = jnp.asarray(vals[:n], jnp.int32)
+    f = np.asarray(flags[:n], bool)
+    f[0] = True
+    got = segmented_scan(v, jnp.asarray(f), jnp.add)
+    want = np.zeros(n, np.int64)
+    run = 0
+    for i in range(n):
+        run = vals[i] if f[i] else run + vals[i]
+        want[i] = run
+    np.testing.assert_array_equal(np.asarray(got), want)
+
+
+def test_cas_requires_expected():
+    t = jnp.zeros((2,), jnp.int32)
+    i = jnp.zeros((1,), jnp.int32)
+    with pytest.raises(ValueError):
+        rmw_serialized(t, i, i, "cas")
+
+
+def test_unknown_op_rejected():
+    t = jnp.zeros((2,), jnp.int32)
+    i = jnp.zeros((1,), jnp.int32)
+    with pytest.raises(ValueError):
+        rmw_combining(t, i, i, "xor")
+
+
+def test_ilp_gap_measured():
+    """Combining-mode throughput beats serialized on independent ops —
+    the paper's Fig. 5 gap (here >= 3x on any host)."""
+    import time
+    rng = np.random.default_rng(0)
+    table = jnp.zeros((4096,), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, 4096, 65536), jnp.int32)
+    vals = jnp.asarray(rng.normal(size=65536), jnp.float32)
+    f_ser = jax.jit(lambda: rmw_serialized(table, idx[:2048], vals[:2048],
+                                           "faa").table)
+    f_comb = jax.jit(lambda: rmw_combining(table, idx, vals, "faa").table)
+    jax.block_until_ready(f_ser()); jax.block_until_ready(f_comb())
+    t0 = time.perf_counter(); jax.block_until_ready(f_ser())
+    t_ser = (time.perf_counter() - t0) / 2048
+    t0 = time.perf_counter(); jax.block_until_ready(f_comb())
+    t_comb = (time.perf_counter() - t0) / 65536
+    assert t_ser / t_comb > 3.0, (t_ser, t_comb)

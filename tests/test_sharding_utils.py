@@ -1,0 +1,78 @@
+"""Divisibility-aware logical sharding rules + HLO stats parser."""
+
+import jax.numpy as jnp
+
+from repro.launch.hlo_stats import (analyze_hlo, split_computations,
+                                    _trip_count)
+from repro.sharding import DEFAULT_RULES, hint, logical_to_physical
+
+
+def test_hint_noop_without_mesh():
+    x = jnp.ones((4, 8))
+    assert hint(x, "batch", None) is x
+
+
+def test_logical_to_physical_without_mesh_is_empty():
+    from jax.sharding import PartitionSpec as P
+    assert logical_to_physical(["batch", None], (4, 8)) == P()
+
+
+HLO = """
+HloModule test
+
+%cond.1 (p: (s32[], f32[8])) -> pred[] {
+  %p = (s32[], f32[8]) parameter(0)
+  %i = s32[] get-tuple-element(%p), index=0
+  %c = s32[] constant(12)
+  ROOT %lt = pred[] compare(%i, %c), direction=LT
+}
+
+%body.1 (p: (s32[], f32[8])) -> (s32[], f32[8]) {
+  %p = (s32[], f32[8]) parameter(0)
+  %x = f32[8]{0} get-tuple-element(%p), index=1
+  %ag = f32[16]{0} all-gather(%x), replica_groups=[2,2]<=[4], dimensions={0}
+  %sl = f32[8]{0} slice(%ag), slice={[0:8]}
+  %ar = f32[8]{0} all-reduce(%sl), replica_groups=[1,4]<=[4], to_apply=%add
+  %i2 = s32[] get-tuple-element(%p), index=0
+  ROOT %t = (s32[], f32[8]) tuple(%i2, %ar)
+}
+
+ENTRY %main (a: f32[4,8], b: f32[8,16]) -> f32[4,16] {
+  %a = f32[4,8]{1,0} parameter(0)
+  %b = f32[8,16]{1,0} parameter(1)
+  %w = (s32[], f32[8]) while((s32[], f32[8]) %init), condition=%cond.1, body=%body.1
+  ROOT %d = f32[4,16]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+}
+"""
+
+
+def test_split_computations():
+    comps, entry = split_computations(HLO)
+    assert entry == "main"
+    assert "body.1" in comps and "cond.1" in comps
+
+
+def test_trip_count_from_condition():
+    comps, _ = split_computations(HLO)
+    assert _trip_count(comps["cond.1"]) == 12
+
+
+def test_collectives_expanded_by_trips():
+    st = analyze_hlo(HLO, world=4)
+    # all-gather: out 16*4B=64B * (2-1)/2 = 32B, x12 trips = 384
+    assert st["all-gather"]["count"] == 12
+    assert abs(st["all-gather"]["wire_bytes"] - 12 * 32) < 1e-6
+    # all-reduce: 2 * 32B * 3/4 = 48B, x12 = 576
+    assert st["all-reduce"]["count"] == 12
+    assert abs(st["all-reduce"]["wire_bytes"] - 12 * 48) < 1e-6
+
+
+def test_dot_flops_counted():
+    st = analyze_hlo(HLO, world=4)
+    # dot: 2 * (4*16) * 8 = 1024 flops
+    assert st["dot_flops"] == 1024
+
+
+def test_default_rules_cover_model_axes():
+    for k in ("batch", "ffn", "heads", "experts", "vocab", "fsdp"):
+        assert k in DEFAULT_RULES
