@@ -1,0 +1,23 @@
+PYTHON ?= python
+# src for the repro package, repo root for the benchmarks package
+export PYTHONPATH := src:.:$(PYTHONPATH)
+
+.PHONY: test test-tier1 smoke bench-rmw
+
+# Tier-1 gate + benchmark smoke (what CI runs).
+test: test-tier1 smoke
+
+test-tier1:
+	$(PYTHON) -m pytest -x -q
+
+# Fast benchmark smoke: latency + bandwidth only (exercises the serialized
+# oracle, the combining path, and the Pallas kernel end to end).
+smoke:
+	$(PYTHON) benchmarks/run.py --fast --only latency,bandwidth
+
+# Full RMW backend shoot-out; rewrites benchmarks/results/rmw_backends.json.
+bench-rmw:
+	$(PYTHON) benchmarks/run.py --only rmw_backends
+
+dev-deps:
+	pip install -r requirements-dev.txt

@@ -1,0 +1,172 @@
+"""RMW backend shoot-out: sort vs sort-free across batch/table sizes.
+
+Measures every registered engine backend (core/rmw_engine.py) on the same
+workload and emits a BENCH JSON (benchmarks/results/rmw_backends.json) so the
+speedup is tracked across PRs and the cost-model constants in
+`perf_model.HardwareSpec` can be (re)tuned against real numbers.
+
+Two suites:
+
+  fetched     full RmwResult contract (table + per-op fetched + success) —
+              the MoE-dispatch / BFS-swp workload.  This is the acceptance
+              table: the sort-free ``onehot`` backend must beat the argsort
+              ``sort`` backend for FAA batches >= 4k against tables <= 64k.
+  table_only  need_fetched=False — the grad-scatter / histogram / BFS-CAS
+              workload, where ``onehot`` degenerates to one bincount-style
+              scatter pass.  The sort backend has no table-only mode, but
+              because this harness returns only ``.table`` here, XLA DCEs
+              its unconsumed fetched machinery too — so these cells compare
+              genuine table-only costs on both sides (near parity on a
+              scalar host; the engine's fast path makes the skip explicit
+              rather than DCE-dependent).
+
+Plus the MoE hot-path microbench: argsort `arrival_rank` vs the engine's
+sort-free one-hot FAA fetch.
+
+Methodology: inputs are passed as jit arguments (never closed-over
+constants — XLA constant-folds those and the numbers turn into memcpy
+measurements), and the full result is returned so nothing is DCE'd.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from functools import partial
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import Csv, time_s
+from repro.core import rmw_engine
+from repro.core.rmw import arrival_rank as arrival_rank_argsort
+
+RESULT_PATH = os.path.join(os.path.dirname(__file__), "results",
+                           "rmw_backends.json")
+
+#: acceptance regime (ISSUE 1): FAA batches >= 4k against tables <= 64k slots
+GRID_N = (4096, 16384, 65536)
+GRID_M = (256, 4096, 65536)
+GRID_N_FAST = (4096,)
+GRID_M_FAST = (256, 4096)
+
+#: serialized oracle is O(n) scan steps — keep it to the smallest batch
+SERIALIZED_MAX_N = 4096
+
+
+def _inputs(rng, n: int, m: int):
+    table = jnp.asarray(rng.normal(size=m), jnp.float32)
+    idx = jnp.asarray(rng.integers(0, m, n), jnp.int32)
+    vals = jnp.asarray(rng.normal(size=n), jnp.float32)
+    return table, idx, vals
+
+
+def _bench_backend(backend: str, op: str, table, idx, vals,
+                   need_fetched: bool) -> float:
+    @partial(jax.jit, static_argnames=())
+    def fn(t, i, v):
+        res = rmw_engine.rmw_execute(t, i, v, op, backend=backend,
+                                     need_fetched=need_fetched)
+        return res if need_fetched else res.table
+
+    # this container's timings swing +/-50% between runs; 5 reps + median
+    # (time_s) keeps single outliers out of the committed table
+    return time_s(lambda: fn(table, idx, vals), reps=5, warmup=2)
+
+
+def run(csv: Csv, fast: bool = False, out_path: str = RESULT_PATH
+        ) -> Dict[str, object]:
+    if fast and out_path == RESULT_PATH:
+        # never clobber the committed full-grid table with a CI smoke run
+        out_path = RESULT_PATH.replace(".json", "_fast.json")
+    rng = np.random.default_rng(42)
+    grid_n = GRID_N_FAST if fast else GRID_N
+    grid_m = GRID_M_FAST if fast else GRID_M
+    rows = []
+
+    def record(suite, op, n, m, backend, t):
+        rows.append({"suite": suite, "op": op, "n": n, "m": m,
+                     "backend": backend, "us_per_call": t * 1e6,
+                     "ns_per_op": t / n * 1e9})
+        csv.add(f"rmw_backends.{suite}.{op}.{backend}.n{n}.m{m}",
+                t * 1e6, f"{t / n * 1e9:.1f} ns/op")
+
+    # -- fetched suite: the acceptance table ------------------------------
+    for n in grid_n:
+        for m in grid_m:
+            table, idx, vals = _inputs(rng, n, m)
+            for backend in ("sort", "onehot"):
+                t = _bench_backend(backend, "faa", table, idx, vals, True)
+                record("fetched", "faa", n, m, backend, t)
+            if n <= SERIALIZED_MAX_N:
+                t = _bench_backend("serialized", "faa", table, idx, vals,
+                                   True)
+                record("fetched", "faa", n, m, backend="serialized", t=t)
+
+    # one non-FAA sample per suite keeps min/swp honest without 3x runtime
+    n_s, m_s = grid_n[0], grid_m[-1]
+    table, idx, vals = _inputs(rng, n_s, m_s)
+    for op in ("min", "swp"):
+        for backend in ("sort", "onehot"):
+            t = _bench_backend(backend, op, table, idx, vals, True)
+            record("fetched", op, n_s, m_s, backend, t)
+
+    # -- table_only suite -------------------------------------------------
+    for n in grid_n:
+        for m in grid_m:
+            table, idx, vals = _inputs(rng, n, m)
+            for backend in ("sort", "onehot"):
+                t = _bench_backend(backend, "faa", table, idx, vals, False)
+                record("table_only", "faa", n, m, backend, t)
+
+    # -- MoE hot path: arrival_rank argsort vs sort-free ------------------
+    n_tok, n_exp = (8192, 64)
+    keys = jnp.asarray(rng.integers(0, n_exp, n_tok), jnp.int32)
+    rank_argsort = jax.jit(arrival_rank_argsort)
+    t_sortrank = time_s(lambda: rank_argsort(keys), reps=3, warmup=2)
+    rank_sf = jax.jit(partial(rmw_engine.arrival_rank, num_keys=n_exp))
+    t_sfrank = time_s(lambda: rank_sf(keys), reps=3, warmup=2)
+    csv.add("rmw_backends.arrival_rank.argsort", t_sortrank * 1e6,
+            f"{t_sortrank / n_tok * 1e9:.1f} ns/key")
+    csv.add("rmw_backends.arrival_rank.sortfree", t_sfrank * 1e6,
+            f"{t_sfrank / n_tok * 1e9:.1f} ns/key "
+            f"speedup={t_sortrank / t_sfrank:.2f}x")
+
+    # -- summarize: onehot-vs-sort speedups + acceptance gate -------------
+    speedups: Dict[str, float] = {}
+    by_cell: Dict[tuple, Dict[str, float]] = {}
+    for r in rows:
+        by_cell.setdefault((r["suite"], r["op"], r["n"], r["m"]), {})[
+            r["backend"]] = r["us_per_call"]
+    acceptance = True
+    for (suite, op, n, m), cells in sorted(by_cell.items()):
+        if "sort" in cells and "onehot" in cells:
+            sp = cells["sort"] / cells["onehot"]
+            speedups[f"{suite}/{op}/n{n}/m{m}"] = round(sp, 3)
+            if suite == "fetched" and op == "faa" and n >= 4096 \
+                    and m <= 65536 and sp <= 1.0:
+                acceptance = False
+
+    out = {
+        "host": {"jax_backend": jax.default_backend(),
+                 "spec": rmw_engine.default_spec().name},
+        "onehot_block": rmw_engine.DEFAULT_ONEHOT_BLOCK,
+        "fast": fast,
+        "rows": rows,
+        "onehot_speedup_over_sort": speedups,
+        "arrival_rank": {
+            "n_tokens": n_tok, "n_experts": n_exp,
+            "argsort_us": t_sortrank * 1e6,
+            "sortfree_us": t_sfrank * 1e6,
+            "speedup": round(t_sortrank / t_sfrank, 3),
+        },
+        "acceptance_onehot_beats_sort_faa_n>=4k_m<=64k": acceptance,
+    }
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=1)
+    csv.add("rmw_backends.acceptance", 0.0,
+            f"onehot_beats_sort={acceptance} json={out_path}")
+    return out

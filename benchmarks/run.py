@@ -11,6 +11,8 @@ Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.Csv).
   bfs               Fig 10b / §6.1             (CAS vs SWP vs FAA TEPS)
   model_validation  Tables 2-3 + §5 NRMSE gate (calibration + validation)
   roofline          §Roofline deliverable      (from dry-run artifacts)
+  rmw_backends      RMW-engine shoot-out       (sort vs sort-free backends;
+                                                emits results/rmw_backends.json)
 """
 
 from __future__ import annotations
@@ -29,7 +31,7 @@ def main() -> None:
 
     from benchmarks import (bandwidth, bfs, contention, latency,
                             model_validation, operand_size, operands_fetched,
-                            prefetcher, roofline, unaligned)
+                            prefetcher, rmw_backends, roofline, unaligned)
     from benchmarks.common import Csv
 
     suite = {
@@ -41,6 +43,7 @@ def main() -> None:
         "unaligned": unaligned.run,
         "prefetcher": prefetcher.run,
         "bfs": lambda c: bfs.run(c, scale=10 if args.fast else 12),
+        "rmw_backends": lambda c: rmw_backends.run(c, fast=args.fast),
         "model_validation": model_validation.run,
         "roofline": roofline.run,
     }

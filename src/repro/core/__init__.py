@@ -6,6 +6,8 @@ Layers (DESIGN.md §2-3):
   contention       — §5.4 contention model (serialized ping-pong vs combining)
   collective_model — mesh collectives priced from per-hop R_O terms
   rmw              — vectorized CAS/FAA/SWP with serialized-equivalent semantics
+  rmw_engine       — backend registry (sort / sort-free one-hot / Pallas /
+                     oracle) + cost-model-driven auto-selection
   validation       — the paper's NRMSE gate (Eq. 12)
   planner          — model-driven schedule/capacity decisions
 """
@@ -18,4 +20,7 @@ from repro.core.perf_model import (  # noqa: F401
 from repro.core.rmw import (  # noqa: F401
     OPS, RmwConfig, RmwResult, arrival_rank, rmw, rmw_combining,
     rmw_serialized, scatter_add_grads, segmented_scan)
+from repro.core.rmw_engine import (  # noqa: F401
+    BACKENDS, RmwBackend, register_backend, rmw_execute, rmw_onehot,
+    select_backend)
 from repro.core.validation import NRMSE_GATE, ValidationRow, nrmse, validate  # noqa: F401

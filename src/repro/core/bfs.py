@@ -4,7 +4,10 @@ The paper's point: CAS/SWP/FAA cost the same, so pick the primitive whose
 *semantics* fit — for the bfs_tree parent array, CAS (set-if-unvisited) and
 SWP (swap + revert) give simple protocols while FAA needs a revert scheme.
 We reproduce the comparison with the vectorized combining RMW: per BFS
-level, all frontier edges issue parent-updates through the chosen combiner.
+level, all frontier edges issue parent-updates through the chosen combiner,
+executed by the RMW engine (`core.rmw_engine.rmw_execute`) — the cost-model
+auto-selected backend by default (typically the sort-free one-hot backend
+for frontier-sized batches), overridable per run for benchmarking.
 
 Kronecker (RMAT) generator included — the paper benchmarks on Kronecker
 graphs that model heavy-tailed real-world graphs.
@@ -20,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.rmw import rmw_combining
+from repro.core.rmw_engine import rmw_execute
 
 Array = jax.Array
 
@@ -51,9 +54,9 @@ class BfsResult:
     edges_traversed: int
 
 
-@partial(jax.jit, static_argnames=("n", "op", "max_levels"))
+@partial(jax.jit, static_argnames=("n", "op", "max_levels", "backend"))
 def _bfs_run(src: Array, dst: Array, root, n: int, op: str,
-             max_levels: int = 64):
+             max_levels: int = 64, backend: str = "auto"):
     parent = jnp.full((n,), -1, jnp.int32).at[root].set(root)
 
     def level(state):
@@ -62,29 +65,35 @@ def _bfs_run(src: Array, dst: Array, root, n: int, op: str,
         cand_dst = jnp.where(active, dst, n)         # OOR -> dropped
         cand_par = src.astype(jnp.int32)
         if op == "cas":
-            res = rmw_combining(parent, cand_dst, cand_par, "cas",
-                                jnp.int32(-1))
+            res = rmw_execute(parent, cand_dst, cand_par, "cas",
+                              jnp.int32(-1), backend=backend,
+                              need_fetched=False)
             new_parent = res.table
         elif op == "swp":
             # swap unconditionally, then revert overwrites of visited nodes.
             # The restore value is the FIRST collider's fetched (the original
             # parent), so the revert stream runs reversed (last-wins of the
             # reversed order == first in program order).
-            res = rmw_combining(parent, cand_dst, cand_par, "swp")
+            res = rmw_execute(parent, cand_dst, cand_par, "swp",
+                              backend=backend)
             visited_before = res.fetched != -1
             revert_idx = jnp.where(visited_before, cand_dst, n)
-            new_parent = rmw_combining(res.table, revert_idx[::-1],
-                                       res.fetched[::-1], "swp").table
+            new_parent = rmw_execute(res.table, revert_idx[::-1],
+                                     res.fetched[::-1], "swp",
+                                     backend=backend,
+                                     need_fetched=False).table
         else:  # faa with revert (the paper's "complex scheme")
             delta = jnp.where(parent[jnp.clip(cand_dst, 0, n - 1)] == -1,
                               cand_par + 1, 0)
-            res = rmw_combining(parent, cand_dst, delta, "faa")
+            res = rmw_execute(parent, cand_dst, delta, "faa",
+                              backend=backend, need_fetched=False)
             over = res.table  # -1 + sum(deltas); keep first contributor only
             # revert: recompute exact winner via min-combine of parities
-            first = rmw_combining(
+            first = rmw_execute(
                 jnp.full((n,), jnp.iinfo(jnp.int32).max, jnp.int32),
                 cand_dst, jnp.where(delta > 0, cand_par,
-                                    jnp.iinfo(jnp.int32).max), "min").table
+                                    jnp.iinfo(jnp.int32).max), "min",
+                backend=backend, need_fetched=False).table
             new_parent = jnp.where(
                 (parent == -1) & (first != jnp.iinfo(jnp.int32).max),
                 first, parent)
@@ -104,11 +113,12 @@ def _bfs_run(src: Array, dst: Array, root, n: int, op: str,
 
 
 def bfs(src: np.ndarray, dst: np.ndarray, n: int, root: int = 0,
-        op: str = "cas") -> BfsResult:
-    """Level-synchronous BFS; op ∈ {cas, swp, faa} picks the combiner."""
+        op: str = "cas", backend: str = "auto") -> BfsResult:
+    """Level-synchronous BFS; op ∈ {cas, swp, faa} picks the combiner and
+    ``backend`` the RMW engine implementation ("auto" = cost-model pick)."""
     parent, lvl, edges = _bfs_run(
         jnp.asarray(src, jnp.int32), jnp.asarray(dst, jnp.int32),
-        jnp.int32(root), int(n), op)
+        jnp.int32(root), int(n), op, backend=backend)
     return BfsResult(parent=parent, levels=int(lvl),
                      edges_traversed=int(edges))
 

@@ -55,6 +55,16 @@ class HardwareSpec:
     ici_link_Bps: float = 0.0
     # Relaxed/combining-mode per-element throughput (ops/s) — the ILP ceiling.
     combine_ops_per_s: float = 0.0
+    # --- RMW-engine backend-selection constants (core/rmw_engine.py) ---
+    # Per-element cost of ONE pass of a hardware sort network/merge phase;
+    # the argsort backend pays ~log2(n) of these.  0 -> derived fallback.
+    sort_elem_pass_s: float = 0.0
+    # Amortized per-element random gather/scatter cost against a table that
+    # fits the working tier (vectorized, pipelined — NOT a full miss).
+    gather_elem_s: float = 0.0
+    # Per-block loop-step overhead of the blocked one-hot backend (scan/DMA
+    # bookkeeping per (batch-block) iteration).
+    loop_step_s: float = 0.0
 
     def with_residuals(self, residual: Mapping[Tuple[str, Tier], float]) -> "HardwareSpec":
         return replace(self, residual_s=dict(residual))
@@ -94,6 +104,11 @@ TPU_V5E = HardwareSpec(
     hbm_Bps=819e9,
     ici_link_Bps=50e9,
     combine_ops_per_s=197e12 / 2,      # VPU-bound elementwise combine ceiling
+    # TPUs sort badly (no sort network; lowered to O(log^2 n) bitonic passes
+    # over the VPU) while one-hot contractions hit the MXU: bias accordingly.
+    sort_elem_pass_s=4e-9,
+    gather_elem_s=2e-9,
+    loop_step_s=2e-6,
 )
 
 
@@ -127,6 +142,12 @@ def cpu_default_spec() -> HardwareSpec:
         hbm_Bps=2e10,
         ici_link_Bps=1e10,
         combine_ops_per_s=2e9,
+        # XLA:CPU's stable sort costs ~O(n log n) comparator work; gathers
+        # are cheap while they hit cache.  Tuned against the committed
+        # benchmarks/results/rmw_backends.json table for this container.
+        sort_elem_pass_s=3e-9,
+        gather_elem_s=1.5e-9,
+        loop_step_s=1.5e-6,
     )
 
 

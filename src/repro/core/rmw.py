@@ -16,6 +16,12 @@ semantics).  This module provides:
 Shared helpers (`segmented_scan`, `arrival_rank`) are reused by the MoE
 dispatch (position-in-expert counters = FAA fetch results) and the BFS
 example (parent updates = CAS/SWP).
+
+This module holds the *sort* (argsort + segmented scan) implementation and
+the serialized oracle.  The hot-path entry point is `core.rmw_engine`, which
+adds a sort-free blocked one-hot backend and the Pallas MXU kernel behind a
+cost-model-driven backend registry; `rmw()` below dispatches there for the
+non-legacy modes ("auto", "onehot", "pallas").
 """
 
 from __future__ import annotations
@@ -228,13 +234,18 @@ def _cas_uniform(table: Array, indices: Array, values: Array,
 # Public facade
 # ---------------------------------------------------------------------------
 
+#: modes accepted by :class:`RmwConfig`.  "combining"/"sort" is the argsort
+#: path in this module; "serialized" the oracle; the rest dispatch to the
+#: engine registry in `core.rmw_engine` ("auto" = cost-model selection).
+RMW_MODES = ("combining", "serialized", "auto", "sort", "onehot", "pallas")
+
+
 @dataclasses.dataclass(frozen=True)
 class RmwConfig:
-    mode: str = "combining"   # "combining" (default, the paper's proposed fix)
-                              # | "serialized" (paper's measured hardware)
+    mode: str = "combining"   # see RMW_MODES
 
     def __post_init__(self):
-        if self.mode not in ("combining", "serialized"):
+        if self.mode not in RMW_MODES:
             raise ValueError(self.mode)
 
 
@@ -242,8 +253,13 @@ def rmw(table: Array, indices: Array, values: Array, op: str,
         expected: Optional[Array] = None,
         config: RmwConfig = RmwConfig()) -> RmwResult:
     """Batch RMW with selectable execution mode (see module docstring)."""
-    fn = rmw_combining if config.mode == "combining" else rmw_serialized
-    return fn(table, indices, values, op, expected)
+    if config.mode == "combining":
+        return rmw_combining(table, indices, values, op, expected)
+    if config.mode == "serialized":
+        return rmw_serialized(table, indices, values, op, expected)
+    from repro.core import rmw_engine  # deferred: engine imports this module
+    return rmw_engine.rmw_execute(table, indices, values, op, expected,
+                                  backend=config.mode)
 
 
 def scatter_add_grads(grad_table: Array, token_ids: Array,

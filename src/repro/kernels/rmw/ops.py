@@ -1,18 +1,25 @@
 """jit'd public wrappers for the combining-RMW kernel.
 
 Handles padding (table to the tile multiple, batch to the block multiple),
-dtype management, and backend selection: on TPU the Mosaic kernel runs
-compiled; elsewhere ``interpret=True`` executes the same kernel body (the
-validation mode used by this container's tests/benchmarks).
+dtype management, and platform dispatch: on TPU the Mosaic kernel runs
+compiled; elsewhere ``interpret`` (auto-selected, no longer hardcoded)
+executes the same kernel body — the validation mode used by this container's
+tests/benchmarks.
+
+`rmw_apply` returns the updated table only; `rmw_apply_fetched` additionally
+returns per-op serialized-order fetch results and CAS success flags — this is
+the entry the RMW engine's ``pallas`` backend (`core.rmw_engine`) calls.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.rmw import RmwResult
 from repro.kernels.rmw import kernel as _k
 from repro.kernels.rmw import ref as _ref
 
@@ -52,6 +59,33 @@ def rmw_apply(table: Array, indices: Array, values: Array, op: str = "faa",
     out = _k.rmw_table(tab_p, idx_p, val_p, op, table_tile=table_tile,
                        block=block, interpret=not _on_tpu())
     return out[:n]
+
+
+@functools.partial(jax.jit, static_argnames=("op", "table_tile", "block"))
+def rmw_apply_fetched(table: Array, indices: Array, values: Array,
+                      op: str = "faa", *, expected: Optional[Array] = None,
+                      table_tile: int = _k.DEFAULT_TABLE_TILE,
+                      block: int = _k.DEFAULT_BLOCK) -> RmwResult:
+    """Combining RMW with per-op fetched values (and CAS success flags).
+
+    Pads like :func:`rmw_apply`; fetched/success are sliced back to the
+    caller's batch.  Out-of-range indices are dropped (fetched 0, success
+    False).  CAS takes one uniform ``expected`` value.
+    """
+    n = table.shape[0]
+    n_ops = indices.shape[0]
+    values = values.astype(table.dtype)
+    tab_p = _pad_to(table, table_tile, 0)
+    # out-of-range ops must not observe table-padding slots: route them (and
+    # the batch padding) past even the padded table so no one-hot row matches
+    idx = indices.astype(jnp.int32)
+    idx = jnp.where((idx < 0) | (idx >= n), jnp.int32(tab_p.shape[0]), idx)
+    idx_p = _pad_to(idx, block, jnp.int32(tab_p.shape[0]))
+    val_p = _pad_to(values, block, 0)
+    out, fetched, success = _k.rmw_table_fetched(
+        tab_p, idx_p, val_p, op, expected=expected, table_tile=table_tile,
+        block=block, interpret=not _on_tpu())
+    return RmwResult(out[:n], fetched[:n_ops], success[:n_ops])
 
 
 def histogram(indices: Array, num_bins: int, **kw) -> Array:

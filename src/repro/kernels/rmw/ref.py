@@ -11,9 +11,16 @@ the selected combiner:
 
 Out-of-range indices (>= table size) are dropped — the kernel uses this to
 implement masking/padding, and MoE dispatch uses it for token dropping.
+
+`rmw_table_fetched_ref` is the serialized oracle for the kernel's
+fetched-value/CAS outputs (kernel.py `rmw_table_fetched`): op-at-a-time in
+batch order, dropped ops observing fetched = 0 / success = False.
 """
 
 from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -47,6 +54,44 @@ def rmw_table_ref(table: Array, indices: Array, values: Array, op: str) -> Array
         gathered = values[jnp.clip(last_pos, 0, None)]
         return jnp.where(written, gathered, table)
     raise ValueError(f"unknown op {op!r}")
+
+
+@partial(jax.jit, static_argnames=("op",))
+def rmw_table_fetched_ref(table: Array, indices: Array, values: Array,
+                          op: str, expected: Optional[Array] = None
+                          ) -> Tuple[Array, Array, Array]:
+    """Order-faithful (table, fetched, success) with drop semantics.
+
+    Matches `core.rmw.rmw_serialized` for in-range ops; indices outside
+    [0, table size) are skipped entirely (fetched 0, success False).
+    """
+    n = table.shape[0]
+    e = jnp.asarray(0 if expected is None else expected, table.dtype)
+
+    def step(tab, inp):
+        i, v = inp
+        valid = (i >= 0) & (i < n)
+        safe = jnp.clip(i, 0, n - 1)
+        old = tab[safe]
+        if op == "faa":
+            new, ok = old + v, jnp.array(True)
+        elif op == "swp":
+            new, ok = v, jnp.array(True)
+        elif op == "min":
+            new, ok = jnp.minimum(old, v), jnp.array(True)
+        elif op == "max":
+            new, ok = jnp.maximum(old, v), jnp.array(True)
+        elif op == "cas":
+            ok = old == e
+            new = jnp.where(ok, v, old)
+        else:
+            raise ValueError(f"unknown op {op!r}")
+        tab = tab.at[safe].set(jnp.where(valid, new, old))
+        return tab, (jnp.where(valid, old, jnp.zeros_like(old)), valid & ok)
+
+    table, (fetched, success) = jax.lax.scan(
+        step, table, (indices.astype(jnp.int32), values.astype(table.dtype)))
+    return table, fetched, success
 
 
 def histogram_ref(indices: Array, num_bins: int) -> Array:

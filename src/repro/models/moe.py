@@ -1,9 +1,11 @@
 """Mixture-of-Experts FFN with RMW-semantics dispatch + expert parallelism.
 
-The token->expert dispatch is the paper's contended-RMW workload (DESIGN.md
-§2): each token's (expert, slot) assignment is a Fetch-and-Add on the
-expert's arrival counter (`core.rmw.arrival_rank`), and the *overflow policy*
-is a choice of RMW semantics:
+The token->expert dispatch is the paper's contended-RMW workload (README
+"RMW engine"): each token's (expert, slot) assignment is a Fetch-and-Add on
+the expert's arrival counter.  The hot path runs on the sort-free RMW engine
+(`core.rmw_engine.arrival_rank`, a one-hot FAA fetch — no argsort); gate-
+priority ranking uses ONE fused lexicographic `lax.sort` instead of the
+previous triple argsort.  The *overflow policy* is a choice of RMW semantics:
 
   * ``swp_drop_newest``     — arrival order wins (SWP: late colliders lose)
   * ``cas_keep_top_gate``   — gate priority wins (CAS: highest-priority
@@ -24,12 +26,24 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.rmw import arrival_rank
+from repro.core.rmw import arrival_rank, segmented_scan
+from repro.core.rmw_engine import arrival_rank as arrival_rank_sortfree
 from repro.models.config import ModelConfig
 from repro.models.layers import dense_init, mlp_apply, mlp_init
 from repro.sharding import active_mesh
 
 Array = jax.Array
+
+
+def _shard_map(fn, mesh, in_specs, out_specs):
+    """jax.shard_map with a fallback for older jax (experimental module,
+    `check_rep` instead of `check_vma`)."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
 
 
 # ---------------------------------------------------------------------------
@@ -75,26 +89,37 @@ def _route(x2d: Array, router_w: Array, m) -> Tuple[Array, Array, Array]:
     return gates, ids, (mean_probs, counts)
 
 
-def _priority_rank(expert_ids: Array, gates: Array, policy: str) -> Array:
+def _priority_rank(expert_ids: Array, gates: Array, policy: str,
+                   num_experts: Optional[int] = None) -> Array:
     """Slot rank of each assignment within its expert — the FAA counter.
 
-    swp_drop_newest:    rank by arrival (flattened token order).
-    cas_keep_top_gate:  rank by descending gate (lexsort via double argsort);
-                        the CAS 'winner' is the highest-gate collider.
+    swp_drop_newest:    rank by arrival (flattened token order) — sort-free
+                        via the RMW engine's one-hot FAA fetch when
+                        ``num_experts`` is known (no argsort at all).
+    cas_keep_top_gate:  rank by descending gate; the CAS 'winner' is the
+                        highest-gate collider.  ONE fused lexicographic
+                        ``lax.sort`` on (expert, -gate) replaces the previous
+                        triple argsort (gate argsort -> expert argsort ->
+                        argsort inside arrival_rank).
     """
     flat_e = expert_ids.reshape(-1)
+    n = flat_e.shape[0]
     if policy == "swp_drop_newest":
-        return arrival_rank(flat_e)
+        if num_experts is None:
+            return arrival_rank(flat_e)          # legacy argsort fallback
+        return arrival_rank_sortfree(flat_e, num_experts)
     # ranks are discrete routing decisions: no gradient flows through the
     # sort (grads reach the router through the gate weights only)
-    flat_g = jax.lax.stop_gradient(gates.reshape(-1))
-    by_gate = jnp.argsort(-flat_g, stable=True)
-    by_expert = jnp.argsort(flat_e[by_gate], stable=True)
-    order = by_gate[by_expert]                  # grouped by expert, gate desc
-    n = flat_e.shape[0]
-    ranks_sorted = arrival_rank(flat_e[order])
-    inv = jnp.zeros((n,), jnp.int32).at[order].set(jnp.arange(n, dtype=jnp.int32))
-    return ranks_sorted[inv]
+    flat_g = jax.lax.stop_gradient(gates.reshape(-1)).astype(jnp.float32)
+    iota = jnp.arange(n, dtype=jnp.int32)
+    _, _, order = jax.lax.sort((flat_e, -flat_g, iota), num_keys=2,
+                               is_stable=True)
+    sorted_e = flat_e[order]                    # grouped by expert, gate desc
+    seg_start = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_e[1:] != sorted_e[:-1]])
+    ranks_sorted = segmented_scan(
+        jnp.ones((n,), jnp.int32), seg_start, jnp.add) - 1
+    return jnp.zeros((n,), jnp.int32).at[order].set(ranks_sorted)
 
 
 # ---------------------------------------------------------------------------
@@ -113,7 +138,7 @@ def _dispatch_compute(x2d: Array, params_local: dict, cfg: ModelConfig,
 
     gates, ids, aux = _route(x2d, params_local["router"], m)
     flat_ids = ids.reshape(-1)                              # (T*k,)
-    rank = _priority_rank(ids, gates, m.overflow_policy)
+    rank = _priority_rank(ids, gates, m.overflow_policy, m.n_experts)
     keep = rank < capacity
 
     # slot in the send buffer: (dest shard, expert-local row, capacity slot)
@@ -222,12 +247,11 @@ def moe_ffn(params: dict, x: Array, cfg: ModelConfig
             cnt = jax.lax.psum(cnt, ("model",) + fsdp_spec)
             return out2d.reshape(bl, sl, dl), mp, cnt
 
-        out, mp, cnt = jax.shard_map(
-            shard_fn, mesh=mesh,
-            in_specs=(x_spec, P(), P("model", fsdp_spec, None),
-                      P("model", fsdp_spec, None), P("model", fsdp_spec, None)),
-            out_specs=(x_spec, P(), P()),
-            check_vma=False,
+        out, mp, cnt = _shard_map(
+            shard_fn, mesh,
+            (x_spec, P(), P("model", fsdp_spec, None),
+             P("model", fsdp_spec, None), P("model", fsdp_spec, None)),
+            (x_spec, P(), P()),
         )(x, params["router"], params["w1"], params["w3"], params["w2"])
         loss = _aux_loss(mp, cnt, m)
 

@@ -32,6 +32,29 @@ Array = jax.Array
 Sig = Tuple[str, bool]  # (kind: "attn"|"ssm", is_moe)
 
 
+@jax.custom_vjp
+def grad_barrier(x: Array) -> Array:
+    """`lax.optimization_barrier` with an identity gradient.
+
+    The raw primitive has no differentiation rule; this wrapper keeps the
+    anti-CSE/anti-hoisting effect in both passes (the cotangent is barriered
+    too, so the backward scan's saved-residual layout matches the forward)
+    while differentiating as the identity.
+    """
+    return jax.lax.optimization_barrier(x)
+
+
+def _grad_barrier_fwd(x):
+    return grad_barrier(x), None
+
+
+def _grad_barrier_bwd(_, g):
+    return (jax.lax.optimization_barrier(g),)
+
+
+grad_barrier.defvjp(_grad_barrier_fwd, _grad_barrier_bwd)
+
+
 # ---------------------------------------------------------------------------
 # stage planning
 # ---------------------------------------------------------------------------
@@ -163,8 +186,9 @@ def stage_forward(stage_params: List[Any], x: Array, cfg: ModelConfig,
         xc, aux = carry
         # keep the saved residual in model dtype: the barrier stops XLA from
         # hoisting the norm's f32 upcast into the carry stacking buffer
-        # (doubles saved-activation memory otherwise)
-        xc = jax.lax.optimization_barrier(xc)
+        # (doubles saved-activation memory otherwise); grad_barrier so the
+        # train step can differentiate through the scan
+        xc = grad_barrier(xc)
         if have_cache:
             params_j, caches_j = xs
         else:

@@ -1,0 +1,115 @@
+"""Minimal stand-in for `hypothesis` when it isn't installed.
+
+The container image doesn't ship hypothesis (it's in requirements-dev.txt for
+dev machines), so the property tests import it with a fallback:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from _hypothesis_shim import given, settings, strategies as st
+
+The shim runs each property over a deterministic seeded sample (seed derived
+from the test name, so every test sees a stable but distinct stream).  It
+implements only the surface this repo uses: ``given``, ``settings``
+(max_examples / deadline), and the ``integers`` / ``booleans`` /
+``sampled_from`` / ``lists`` / ``tuples`` strategies — no shrinking, no
+example database.
+"""
+
+from __future__ import annotations
+
+import zlib
+from types import SimpleNamespace
+from typing import Any, Callable
+
+import numpy as np
+
+DEFAULT_MAX_EXAMPLES = 25
+
+
+class SearchStrategy:
+    """A strategy is just a draw function rng -> value."""
+
+    def __init__(self, draw: Callable[[np.random.Generator], Any]):
+        self._draw = draw
+
+    def example_from(self, rng: np.random.Generator) -> Any:
+        return self._draw(rng)
+
+    def map(self, f: Callable[[Any], Any]) -> "SearchStrategy":
+        return SearchStrategy(lambda rng: f(self._draw(rng)))
+
+
+def integers(min_value: int, max_value: int) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+
+def booleans() -> SearchStrategy:
+    return SearchStrategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def sampled_from(elements) -> SearchStrategy:
+    elements = list(elements)
+    return SearchStrategy(lambda rng: elements[rng.integers(0, len(elements))])
+
+
+def lists(elements: SearchStrategy, *, min_size: int = 0,
+          max_size: int = 10) -> SearchStrategy:
+    def draw(rng):
+        size = int(rng.integers(min_size, max_size + 1))
+        return [elements.example_from(rng) for _ in range(size)]
+    return SearchStrategy(draw)
+
+
+def tuples(*strategies: SearchStrategy) -> SearchStrategy:
+    return SearchStrategy(
+        lambda rng: tuple(s.example_from(rng) for s in strategies))
+
+
+strategies = SimpleNamespace(integers=integers, booleans=booleans,
+                             sampled_from=sampled_from, lists=lists,
+                             tuples=tuples,
+                             SearchStrategy=SearchStrategy)
+
+
+class settings:
+    """Decorator recording max_examples on the (already-wrapped) test."""
+
+    def __init__(self, max_examples: int = DEFAULT_MAX_EXAMPLES,
+                 deadline=None, **_ignored):
+        self.max_examples = max_examples
+
+    def __call__(self, fn):
+        fn._shim_max_examples = self.max_examples
+        return fn
+
+
+def given(*strategies_: SearchStrategy):
+    """Run the test body over a deterministic sample of drawn examples.
+
+    The wrapper takes no parameters so pytest doesn't mistake the property
+    arguments for fixtures.
+    """
+
+    def deco(fn):
+        def wrapper():
+            n = getattr(wrapper, "_shim_max_examples", DEFAULT_MAX_EXAMPLES)
+            seed = zlib.crc32(fn.__qualname__.encode("utf-8"))
+            rng = np.random.default_rng(seed)
+            for _ in range(n):
+                args = tuple(s.example_from(rng) for s in strategies_)
+                try:
+                    fn(*args)
+                except Exception as e:  # noqa: BLE001 - re-raise with example
+                    raise AssertionError(
+                        f"property failed for drawn example {args!r}: {e}"
+                    ) from e
+
+        wrapper.__name__ = fn.__name__
+        wrapper.__qualname__ = fn.__qualname__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+
+    return deco

@@ -2,7 +2,10 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container image: fall back to the local shim
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core.bfs import bfs, kronecker_graph, validate_parents
 

@@ -3,7 +3,10 @@
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container image: fall back to the local shim
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.optim.compression import (Compressed, compress, decompress,
                                      wire_bytes)

@@ -3,7 +3,10 @@
 import math
 
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:  # container image: fall back to the local shim
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core.perf_model import (TPU_V5E, bandwidth, calibrate,
                                    cpu_default_spec, ilp_gap, latency,
