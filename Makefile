@@ -2,7 +2,7 @@ PYTHON ?= python
 # src for the repro package, repo root for the benchmarks package
 export PYTHONPATH := src:.:$(PYTHONPATH)
 
-.PHONY: test test-tier1 smoke bench-rmw
+.PHONY: test test-tier1 smoke bench-rmw bench-rmw-sharded calibrate
 
 # Tier-1 gate + benchmark smoke (what CI runs).
 test: test-tier1 smoke
@@ -10,14 +10,23 @@ test: test-tier1 smoke
 test-tier1:
 	$(PYTHON) -m pytest -x -q
 
-# Fast benchmark smoke: latency + bandwidth only (exercises the serialized
-# oracle, the combining path, and the Pallas kernel end to end).
+# Fast benchmark smoke: latency + bandwidth + the sharded-RMW exchange
+# (exercises the serialized oracle, the combining path, the Pallas kernel,
+# and the 8-fake-device distributed protocol end to end).
 smoke:
-	$(PYTHON) benchmarks/run.py --fast --only latency,bandwidth
+	$(PYTHON) benchmarks/run.py --fast --only latency,bandwidth,rmw_sharded
 
 # Full RMW backend shoot-out; rewrites benchmarks/results/rmw_backends.json.
 bench-rmw:
 	$(PYTHON) benchmarks/run.py --only rmw_backends
+
+# Distributed shoot-out (8 fake devices); rewrites results/rmw_sharded.json.
+bench-rmw-sharded:
+	$(PYTHON) benchmarks/run.py --only rmw_sharded
+
+# Fit + persist the container HardwareSpec (results/calibrated_spec.json).
+calibrate:
+	$(PYTHON) benchmarks/run.py --only calibrate
 
 dev-deps:
 	pip install -r requirements-dev.txt

@@ -1,0 +1,178 @@
+"""Sharded-RMW shoot-out: naive vs one-shot vs hierarchical combining.
+
+The distributed analogue of benchmarks/rmw_backends.py: 8 fake host devices
+(subprocess, XLA_FLAGS=--xla_force_host_platform_device_count=8, same
+pattern as tests/test_distributed.py) arranged as a (2 pods x 4 devices)
+mesh run the same RMW workload through every exchange strategy of
+`core/rmw_sharded.py`:
+
+  naive         per-op exchange, no pre-combining — the paper's measured
+                serialized/ping-pong regime (§5.4): every contended op
+                crosses the mesh individually.
+  oneshot       local pre-combine + one all_to_all over the flat mesh.
+  hierarchical  per-pod pre-combine (ICI), deputies re-combine, cross-pod
+                exchange (DCN) — the paper's §6.2 combining tree.
+  dense         pure-FAA table-only psum_scatter degenerate path.
+
+The acceptance row (ISSUE 2): on **contended hot-shard batches** the
+hierarchical tree must beat the naive per-op exchange — the contention
+collapse of the paper's Fig. 8 and its proposed fix, measured end to end.
+The gate is evaluated at the LARGEST per-device batch of the grid: below
+~32k ops/device the exchange is dominated by this oversubscribed host's
+ms-scale collective dispatch (±50% between runs), so smaller hot cells are
+reported but not gated.  Emits benchmarks/results/rmw_sharded.json.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+from typing import Dict
+
+from benchmarks.common import Csv
+
+RESULT_PATH = os.path.join(os.path.dirname(__file__), "results",
+                           "rmw_sharded.json")
+
+SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+import json, time
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.core.rmw_sharded import rmw_sharded
+
+FAST = %(fast)r
+mesh = jax.make_mesh((2, 4), ("pod", "dev"))
+NDEV = 8
+
+def shard_map(fn, in_specs, out_specs):
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as sm
+    return sm(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=False)
+
+def median_time(fn, args, reps=5, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args))
+    out = []
+    for _ in range(reps):
+        t0 = time.perf_counter_ns()
+        jax.block_until_ready(fn(*args))
+        out.append((time.perf_counter_ns() - t0) / 1e9)
+    return float(np.median(out))
+
+rng = np.random.default_rng(42)
+SPEC = P(("pod", "dev"))
+rows = []
+
+def bench(op, strategy, n_per, m, dist, need_fetched):
+    m_loc = m // NDEV
+    if dist == "hot":     # 95%% of ops hammer 8 slots of ONE shard
+        hot = rng.integers(0, 8, (NDEV, n_per))
+        uni = rng.integers(0, m, (NDEV, n_per))
+        idx = np.where(rng.random((NDEV, n_per)) < 0.95, hot, uni)
+    else:
+        idx = rng.integers(0, m, (NDEV, n_per))
+    vals = rng.normal(size=(NDEV, n_per)).astype(np.float32)
+    if op == "cas":
+        vals = rng.integers(-1, 2, (NDEV, n_per)).astype(np.float32)
+    table = jnp.zeros((m,), jnp.float32)
+    idx_j = jnp.asarray(idx, jnp.int32)
+    vals_j = jnp.asarray(vals)
+
+    def fn(t, i, v):
+        res = rmw_sharded(t, i[0], v[0], op,
+                          None if op != "cas" else jnp.float32(0.0),
+                          axis=("pod", "dev"), strategy=strategy,
+                          need_fetched=need_fetched)
+        if need_fetched:
+            return res.table, res.fetched[None], res.success[None]
+        return res.table
+
+    out_specs = (SPEC, SPEC, SPEC) if need_fetched else SPEC
+    jf = jax.jit(shard_map(fn, (SPEC, SPEC, SPEC), out_specs))
+    # the largest batch carries the acceptance gate: buy it extra reps
+    # against this host's noisy collective dispatch
+    t = median_time(jf, (table, idx_j, vals_j),
+                    reps=9 if n_per == max(GRID_N) else 5)
+    n_total = NDEV * n_per
+    rows.append({"suite": "fetched" if need_fetched else "table_only",
+                 "op": op, "strategy": strategy, "n_per_device": n_per,
+                 "m": m, "dist": dist, "us_per_call": t * 1e6,
+                 "ns_per_op": t / n_total * 1e9})
+
+GRID_N = (1024,) if FAST else (8192, 32768)
+M = 4096
+for n_per in GRID_N:
+    for dist in ("hot", "uniform"):
+        for strategy in ("naive", "oneshot", "hierarchical"):
+            bench("faa", strategy, n_per, M, dist, True)
+for dist in ("hot", "uniform"):
+    for strategy in (("oneshot", "dense") if FAST else
+                     ("naive", "oneshot", "hierarchical", "dense")):
+        bench("faa", strategy, GRID_N[-1], M, dist, False)
+if not FAST:
+    for op in ("swp", "cas"):
+        for strategy in ("naive", "oneshot", "hierarchical"):
+            bench(op, strategy, GRID_N[-1], M, "hot", True)
+print("RESULT:" + json.dumps(rows))
+"""
+
+
+def run(csv: Csv, fast: bool = False, out_path: str = RESULT_PATH
+        ) -> Dict[str, object]:
+    if fast and out_path == RESULT_PATH:
+        # never clobber the committed full-grid table with a CI smoke run
+        out_path = RESULT_PATH.replace(".json", "_fast.json")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = "src"
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", SCRIPT % {"fast": fast}], env=env,
+        capture_output=True, text=True, timeout=3600,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
+    if proc.returncode != 0:
+        raise RuntimeError(f"rmw_sharded bench failed: {proc.stderr[-2000:]}")
+    line = [l for l in proc.stdout.splitlines() if l.startswith("RESULT:")][0]
+    rows = json.loads(line[len("RESULT:"):])
+
+    for r in rows:
+        csv.add(f"rmw_sharded.{r['suite']}.{r['op']}.{r['strategy']}"
+                f".n{r['n_per_device']}.m{r['m']}.{r['dist']}",
+                r["us_per_call"], f"{r['ns_per_op']:.1f} ns/op")
+
+    # hierarchical-vs-naive on contended cells: the acceptance gate
+    by_cell: Dict[tuple, Dict[str, float]] = {}
+    for r in rows:
+        by_cell.setdefault(
+            (r["suite"], r["op"], r["n_per_device"], r["m"], r["dist"]),
+            {})[r["strategy"]] = r["us_per_call"]
+    speedups = {}
+    acceptance = True
+    n_gate = max(r["n_per_device"] for r in rows)
+    for (suite, op, n, m, dist), cells in sorted(by_cell.items()):
+        if "naive" in cells and "hierarchical" in cells:
+            sp = cells["naive"] / cells["hierarchical"]
+            speedups[f"{suite}/{op}/n{n}/m{m}/{dist}"] = round(sp, 3)
+            if dist == "hot" and n == n_gate and sp <= 1.0:
+                acceptance = False
+
+    out = {
+        "host": {"jax_backend": "cpu", "devices": 8, "mesh": "2x4 pod*dev"},
+        "fast": fast,
+        "rows": rows,
+        "hierarchical_speedup_over_naive": speedups,
+        "acceptance_hierarchical_beats_naive_on_hot": acceptance,
+    }
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=1)
+    csv.add("rmw_sharded.acceptance", 0.0,
+            f"hierarchical_beats_naive_on_hot={acceptance} json={out_path}")
+    return out

@@ -13,6 +13,12 @@ Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.Csv).
   roofline          §Roofline deliverable      (from dry-run artifacts)
   rmw_backends      RMW-engine shoot-out       (sort vs sort-free backends;
                                                 emits results/rmw_backends.json)
+  rmw_sharded       Distributed-RMW shoot-out  (naive vs one-shot vs
+                                                hierarchical combining on an
+                                                8-fake-device mesh; emits
+                                                results/rmw_sharded.json)
+  calibrate         HardwareSpec persistence   (fits engine constants, writes
+                                                results/calibrated_spec.json)
 """
 
 from __future__ import annotations
@@ -29,9 +35,10 @@ def main() -> None:
                     help="smaller problem sizes (CI)")
     args = ap.parse_args()
 
-    from benchmarks import (bandwidth, bfs, contention, latency,
+    from benchmarks import (bandwidth, bfs, calibrate, contention, latency,
                             model_validation, operand_size, operands_fetched,
-                            prefetcher, rmw_backends, roofline, unaligned)
+                            prefetcher, rmw_backends, rmw_sharded, roofline,
+                            unaligned)
     from benchmarks.common import Csv
 
     suite = {
@@ -44,6 +51,8 @@ def main() -> None:
         "prefetcher": prefetcher.run,
         "bfs": lambda c: bfs.run(c, scale=10 if args.fast else 12),
         "rmw_backends": lambda c: rmw_backends.run(c, fast=args.fast),
+        "rmw_sharded": lambda c: rmw_sharded.run(c, fast=args.fast),
+        "calibrate": lambda c: calibrate.run(c, fast=args.fast),
         "model_validation": model_validation.run,
         "roofline": roofline.run,
     }

@@ -8,19 +8,36 @@ Layers (DESIGN.md §2-3):
   rmw              — vectorized CAS/FAA/SWP with serialized-equivalent semantics
   rmw_engine       — backend registry (sort / sort-free one-hot / Pallas /
                      oracle) + cost-model-driven auto-selection
+  rmw_sharded      — mesh-wide sharded atomics: two-phase combine/resolve
+                     over shard_map axes with hierarchical (per-pod) trees
   validation       — the paper's NRMSE gate (Eq. 12)
   planner          — model-driven schedule/capacity decisions
+
+Note: `from repro.core import rmw` yields the *module*; the batch-RMW facade
+function it defines is re-exported as `rmw_run` (the old function-shadowing
+re-export was a namespace collision — the module stays callable with a
+DeprecationWarning for legacy callers).
 """
 
 from repro.core.placement import Ownership, PlacementState, Tier  # noqa: F401
 from repro.core.perf_model import (  # noqa: F401
     RMW_OPS, TPU_V5E, HardwareSpec, bandwidth, calibrate, cpu_default_spec,
     ilp_gap, latency, read_for_ownership, read_latency, relaxed_bandwidth,
-    unaligned_latency)
+    spec_from_dict, spec_to_dict, unaligned_latency)
 from repro.core.rmw import (  # noqa: F401
-    OPS, RmwConfig, RmwResult, arrival_rank, rmw, rmw_combining,
-    rmw_serialized, scatter_add_grads, segmented_scan)
+    OPS, RmwConfig, RmwResult, arrival_rank, rmw_combining, rmw_serialized,
+    scatter_add_grads, segmented_scan)
+from repro.core.rmw import rmw as rmw_run  # noqa: F401  (renamed re-export)
 from repro.core.rmw_engine import (  # noqa: F401
-    BACKENDS, RmwBackend, register_backend, rmw_execute, rmw_onehot,
-    select_backend)
+    BACKENDS, RmwBackend, calibrated_spec_path, default_spec,
+    register_backend, rmw_execute, rmw_onehot, select_backend)
+from repro.core.rmw_sharded import (  # noqa: F401
+    EXCHANGE_COSTS, STRATEGIES, MeshAxis, cost_exchange_hierarchical,
+    cost_exchange_oneshot, rmw_sharded, select_exchange)
 from repro.core.validation import NRMSE_GATE, ValidationRow, nrmse, validate  # noqa: F401
+
+# re-bind the submodule under its own name (the collision fix): the
+# `from repro.core.rmw import ...` lines above imported the submodule, so it
+# is in sys.modules; this import statement makes the package attribute the
+# MODULE rather than whatever was re-exported last.
+from repro.core import rmw  # noqa: F401, E402

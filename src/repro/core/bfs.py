@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.rmw_engine import rmw_execute
+from repro.core.rmw_sharded import rmw_sharded
 
 Array = jax.Array
 
@@ -121,6 +122,65 @@ def bfs(src: np.ndarray, dst: np.ndarray, n: int, root: int = 0,
         jnp.int32(root), int(n), op, backend=backend)
     return BfsResult(parent=parent, levels=int(lvl),
                      edges_traversed=int(edges))
+
+
+def bfs_sharded(src: np.ndarray, dst: np.ndarray, n: int, root: int = 0,
+                *, axis: str = "dev", mesh=None, strategy: str = "auto",
+                max_levels: int = 64) -> BfsResult:
+    """Level-synchronous BFS with the **frontier table sharded over a mesh**.
+
+    The parent array — the paper's contended cache line — is sharded over
+    `axis` (vertex ``v`` owned by shard ``v // n_local``); edges are split
+    over the same devices.  Each level gathers the frontier bitmap and issues
+    every frontier edge's ``cas(parent[dst], -1, src)`` through the sharded
+    RMW subsystem (`core.rmw_sharded`): per-device pre-combine (one CAS per
+    distinct destination survives), owner-shard resolve, table-only fast
+    path.  Parent selection is identical to the single-device `bfs` because
+    the arrival-order contract serializes edges in (device-rank, local)
+    order — exactly the concatenated edge order of the unsharded run.
+    """
+    if mesh is None:
+        mesh = jax.make_mesh((jax.device_count(),), (axis,))
+    ndev = int(mesh.shape[axis])
+    n_pad = -(-n // ndev) * ndev
+    e_pad = -(-len(src) // ndev) * ndev
+    srcp = np.full((e_pad,), n_pad, np.int32)
+    dstp = np.full((e_pad,), n_pad, np.int32)
+    srcp[:len(src)] = np.asarray(src, np.int32)
+    dstp[:len(dst)] = np.asarray(dst, np.int32)
+    parent0 = jnp.full((n_pad,), -1, jnp.int32).at[root].set(root)
+    frontier0 = jnp.zeros((n_pad,), bool).at[root].set(True)
+    P = jax.sharding.PartitionSpec
+
+    def shard_fn(parent, frontier, s, d):
+        def body(state):
+            parent, frontier, lvl, edges, _ = state
+            fg = jax.lax.all_gather(frontier, axis, tiled=True)  # (n_pad,)
+            active = fg[jnp.clip(s, 0, n_pad - 1)] & (s < n_pad)
+            cand = jnp.where(active, d, n_pad)                   # OOR drops
+            res = rmw_sharded(parent, cand, s, "cas", jnp.int32(-1),
+                              axis=axis, strategy=strategy,
+                              need_fetched=False)
+            newf = (res.table != -1) & (parent == -1)
+            edges = edges + jax.lax.psum(jnp.sum(active), axis)
+            more = jax.lax.psum(jnp.sum(newf), axis) > 0
+            return res.table, newf, lvl + jnp.int32(1), edges, more
+        def cond(state):
+            _, _, lvl, _, more = state
+            return more & (lvl < max_levels)
+        parent, _, lvl, edges, _ = jax.lax.while_loop(
+            cond, body, (parent, frontier, jnp.int32(0), jnp.int32(0),
+                         jnp.array(True)))
+        return parent, lvl[None], edges[None]
+
+    from repro.sharding import shard_map_compat
+    mapped = shard_map_compat(shard_fn, mesh,
+                              (P(axis), P(axis), P(axis), P(axis)),
+                              (P(axis), P(axis), P(axis)))
+    parent, lvl, edges = jax.jit(mapped)(parent0, frontier0,
+                                         jnp.asarray(srcp), jnp.asarray(dstp))
+    return BfsResult(parent=parent[:n], levels=int(lvl[0]),
+                     edges_traversed=int(edges[0]))
 
 
 def validate_parents(src: np.ndarray, dst: np.ndarray, parent: np.ndarray,

@@ -68,6 +68,63 @@ def contended_bandwidth_combining(spec: HardwareSpec, op: str, n_writers: int,
     return min(useful / t, root_cap * n_writers)
 
 
+def contended_bandwidth_hierarchical(spec: HardwareSpec, op: str,
+                                     n_pods: int, writers_per_pod: int,
+                                     ici_tier: Tier = Tier.ICI_NEIGHBOR,
+                                     dcn_tier: Tier = Tier.DCN_REMOTE_POD,
+                                     operand_bytes: int = 8,
+                                     batch_per_writer: int = 1024) -> float:
+    """Aggregate bytes/s under *two-level* combining: per-pod ICI tree, then
+    one cross-pod DCN reduction (the paper's §6.2 combining tree spanning
+    pods; `core/rmw_sharded.py` is the executable realization).
+
+    Relative to the flat tree of :func:`contended_bandwidth_combining` over
+    all ``n_pods * writers_per_pod`` writers, the hierarchy pays the slow DCN
+    hop only ``ceil(log2 n_pods)`` times instead of on every upper tree
+    level — the crossover in favour of hierarchy grows with the DCN:ICI
+    latency ratio and with per-pod writer count.  Includes the per-collective
+    software launch (`HardwareSpec.collective_launch_s`), which is what keeps
+    one-shot ahead for tiny uncontended batches.
+    """
+    n_writers = n_pods * writers_per_pod
+    useful = n_writers * batch_per_writer * operand_bytes
+    local_combine = batch_per_writer / max(spec.combine_ops_per_s, 1.0)
+    ici_depth = math.ceil(math.log2(max(2, writers_per_pod)))
+    dcn_depth = math.ceil(math.log2(max(2, n_pods))) if n_pods > 1 else 0
+    ici_hop = read_for_ownership(spec, PlacementState(tier=ici_tier),
+                                 operand_bytes)
+    dcn_hop = read_for_ownership(spec, PlacementState(tier=dcn_tier),
+                                 operand_bytes)
+    e = spec.execute_s.get(op, 0.0)
+    t = (local_combine + ici_depth * (ici_hop + e) + dcn_depth * (dcn_hop + e)
+         + 2 * spec.collective_launch_s)
+    root_cap = spec.tier_bandwidth_Bps[dcn_tier if n_pods > 1 else ici_tier]
+    return min(useful / t, root_cap * n_writers)
+
+
+def hierarchical_crossover_pods(spec: HardwareSpec, op: str,
+                                writers_per_pod: int, max_pods: int = 64,
+                                ici_tier: Tier = Tier.ICI_NEIGHBOR,
+                                dcn_tier: Tier = Tier.DCN_REMOTE_POD,
+                                operand_bytes: int = 8,
+                                batch_per_writer: int = 1024) -> int:
+    """Smallest pod count at which two-level combining beats the flat tree
+    (paper Fig. 8 crossover, distributed edition); 0 if it never does.
+    Both trees see the same tiers: the flat tree's every upper level rides
+    the cross-pod `dcn_tier`."""
+    for n_pods in range(2, max_pods + 1):
+        flat = contended_bandwidth_combining(
+            spec, op, n_pods * writers_per_pod, remote_tier=dcn_tier,
+            operand_bytes=operand_bytes, batch_per_writer=batch_per_writer)
+        hier = contended_bandwidth_hierarchical(
+            spec, op, n_pods, writers_per_pod, ici_tier=ici_tier,
+            dcn_tier=dcn_tier, operand_bytes=operand_bytes,
+            batch_per_writer=batch_per_writer)
+        if hier > flat:
+            return n_pods
+    return 0
+
+
 def hot_expert_capacity(spec: HardwareSpec, tokens_per_step: int, n_experts: int,
                         top_k: int, n_writers: int,
                         hot_fraction: float = 0.2,

@@ -65,6 +65,16 @@ class HardwareSpec:
     # Per-block loop-step overhead of the blocked one-hot backend (scan/DMA
     # bookkeeping per (batch-block) iteration).
     loop_step_s: float = 0.0
+    # --- distributed-exchange terms (core/rmw_sharded.py, contention.py) ---
+    # Per-link DCN bandwidth for cross-pod exchanges (the ICI analogue is
+    # `ici_link_Bps`); tier_bandwidth_Bps[DCN_REMOTE_POD] stays the raw
+    # streaming number while this is the per-collective effective rate.
+    dcn_link_Bps: float = 0.0
+    # Software dispatch cost of launching ONE collective (all_to_all /
+    # psum_scatter ring setup) — dominates small contended exchanges and is
+    # what makes hierarchical (3 collectives) lose to one-shot (2) on
+    # uncontended batches.
+    collective_launch_s: float = 0.0
 
     def with_residuals(self, residual: Mapping[Tuple[str, Tier], float]) -> "HardwareSpec":
         return replace(self, residual_s=dict(residual))
@@ -109,6 +119,8 @@ TPU_V5E = HardwareSpec(
     sort_elem_pass_s=4e-9,
     gather_elem_s=2e-9,
     loop_step_s=2e-6,
+    dcn_link_Bps=25e9,
+    collective_launch_s=1e-6,
 )
 
 
@@ -148,6 +160,9 @@ def cpu_default_spec() -> HardwareSpec:
         sort_elem_pass_s=3e-9,
         gather_elem_s=1.5e-9,
         loop_step_s=1.5e-6,
+        # fake-device "pods" on one host still pay XLA's collective dispatch
+        dcn_link_Bps=1e9,
+        collective_launch_s=2e-5,
     )
 
 
@@ -256,6 +271,57 @@ def unaligned_latency(spec: HardwareSpec, op: str, state: PlacementState) -> flo
     serialization penalty; we model L_unaligned = 2 L(A,S) + E(A).
     """
     return 2.0 * latency(spec, op, state) + spec.execute_s.get(op, 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Persistence (benchmarks/calibrate.py writes, rmw_engine.default_spec loads)
+# ---------------------------------------------------------------------------
+
+def spec_to_dict(spec: HardwareSpec) -> Dict:
+    """JSON-safe dict: Tier enums become their string values, residual keys
+    become ``"op/tier"`` strings.  Inverse of :func:`spec_from_dict`."""
+    import dataclasses
+    d = dataclasses.asdict(spec)
+    d["tier_latency_s"] = {t.value: v for t, v in spec.tier_latency_s.items()}
+    d["tier_bandwidth_Bps"] = {t.value: v
+                               for t, v in spec.tier_bandwidth_Bps.items()}
+    d["residual_s"] = {f"{op}/{t.value}": v
+                       for (op, t), v in spec.residual_s.items()}
+    return d
+
+
+def spec_from_dict(d: Mapping, base: HardwareSpec | None = None) -> HardwareSpec:
+    """Rebuild a spec from :func:`spec_to_dict` output.  Unknown keys are
+    ignored and missing ones inherit from ``base`` (so older calibration
+    files keep working as the spec grows fields)."""
+    base = base if base is not None else cpu_default_spec()
+    by_value = {t.value: t for t in Tier}
+    kw: Dict = {}
+    for f in HardwareSpec.__dataclass_fields__:
+        if f in d:
+            kw[f] = d[f]
+    if "tier_latency_s" in d:
+        kw["tier_latency_s"] = {by_value[k]: float(v)
+                                for k, v in d["tier_latency_s"].items()
+                                if k in by_value}
+    if "tier_bandwidth_Bps" in d:
+        kw["tier_bandwidth_Bps"] = {by_value[k]: float(v)
+                                    for k, v in d["tier_bandwidth_Bps"].items()
+                                    if k in by_value}
+    if "residual_s" in d:
+        res = {}
+        for k, v in d["residual_s"].items():
+            op, _, tier = k.partition("/")
+            if tier in by_value:
+                res[(op, by_value[tier])] = float(v)
+        kw["residual_s"] = res
+    # tiers the file doesn't mention inherit the base spec's constants
+    for field_name in ("tier_latency_s", "tier_bandwidth_Bps"):
+        if field_name in kw:
+            merged = dict(getattr(base, field_name))
+            merged.update(kw[field_name])
+            kw[field_name] = merged
+    return replace(base, **kw)
 
 
 # ---------------------------------------------------------------------------

@@ -267,3 +267,31 @@ def scatter_add_grads(grad_table: Array, token_ids: Array,
     """Embedding-gradient accumulation = a pure-FAA RMW batch (dense archs'
     use of the paper technique; DESIGN.md §5)."""
     return grad_table.at[token_ids].add(grads)
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shim: `repro.core` used to re-export the *function* `rmw` under
+# the same name as this module, so `from repro.core import rmw` yielded the
+# function and shadowed the module.  The package now exports the function as
+# `rmw_run` and leaves this attribute as the module — but to keep old callers
+# alive, the module itself stays callable (with a DeprecationWarning).
+# ---------------------------------------------------------------------------
+
+def _install_callable_module() -> None:
+    import sys
+    import types
+    import warnings
+
+    class _CallableRmwModule(types.ModuleType):
+        def __call__(self, *args, **kwargs):
+            warnings.warn(
+                "calling `repro.core.rmw` as a function is deprecated: "
+                "`from repro.core import rmw` now yields the module; use "
+                "`repro.core.rmw_run` or `repro.core.rmw.rmw` instead",
+                DeprecationWarning, stacklevel=2)
+            return rmw(*args, **kwargs)
+
+    sys.modules[__name__].__class__ = _CallableRmwModule
+
+
+_install_callable_module()

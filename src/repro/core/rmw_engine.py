@@ -364,9 +364,53 @@ register_backend(RmwBackend(
     run=_run_pallas, cost=cost_pallas, float_table_only=True))
 
 
+def calibrated_spec_path() -> str:
+    """Where `benchmarks/calibrate.py` persists the fitted CPU spec.
+
+    Overridable via ``REPRO_CALIBRATED_SPEC`` (tests use this); the default
+    is the committed benchmark-results location at the repo root.
+    """
+    import os
+    env = os.environ.get("REPRO_CALIBRATED_SPEC")
+    if env:
+        return env
+    root = os.path.dirname(os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__)))))
+    return os.path.join(root, "benchmarks", "results",
+                        "calibrated_spec.json")
+
+
+_SPEC_CACHE: Dict[str, perf_model.HardwareSpec] = {}
+
+
+def _reset_spec_cache() -> None:  # test hook
+    _SPEC_CACHE.clear()
+
+
 def default_spec() -> perf_model.HardwareSpec:
-    return (perf_model.TPU_V5E if jax.default_backend() == "tpu"
-            else perf_model.cpu_default_spec())
+    """Platform spec: TPU constants on TPU; on CPU the calibrated spec from
+    `benchmarks/calibrate.py` when present (falling back to the priors)."""
+    backend = jax.default_backend()
+    if backend in _SPEC_CACHE:
+        return _SPEC_CACHE[backend]
+    if backend == "tpu":
+        spec = perf_model.TPU_V5E
+    else:
+        spec = perf_model.cpu_default_spec()
+        path = calibrated_spec_path()
+        try:
+            import json
+            import os
+            if os.path.exists(path):
+                with open(path) as f:
+                    payload = json.load(f)
+                if payload.get("jax_backend", backend) == backend:
+                    spec = perf_model.spec_from_dict(
+                        payload.get("spec", payload), base=spec)
+        except (OSError, ValueError, KeyError, TypeError):
+            pass  # unreadable calibration files must never break dispatch
+    _SPEC_CACHE[backend] = spec
+    return spec
 
 
 def select_backend(op: str, n: int, m: int,

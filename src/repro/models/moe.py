@@ -16,6 +16,18 @@ dispatch all_to_all runs inside shard_map.  Expert weights are additionally
 ZeRO-3 sharded over ("pod","data") and all-gathered per layer inside the
 shard (explicit FSDP).  Without a mesh the same routing runs in-process
 (smoke tests).
+
+The cross-device statistics run on the *sharded* RMW subsystem
+(`core.rmw_sharded`) instead of raw collectives: expert counts are a pure
+sharded FAA onto an expert-count table sharded over ``model`` (the
+``psum_scatter`` degenerate path — what used to be a `psum` of dense
+one-hot sums), and the capacity-overflow decision for the arrival-order
+policy uses the *fetched* values of a sharded FAA — each assignment's global
+arrival rank across every writer in the documented (fsdp-major, model-minor)
+device order, compared against the global capacity exactly like the
+single-device dispatch compares its local FAA fetch.  The gate-priority
+policy keeps local ranks: priority order is not an FAA; a cross-shard
+priority CAS is the per-op-expected follow-on in the ROADMAP.
 """
 
 from __future__ import annotations
@@ -28,22 +40,12 @@ from jax.sharding import PartitionSpec as P
 
 from repro.core.rmw import arrival_rank, segmented_scan
 from repro.core.rmw_engine import arrival_rank as arrival_rank_sortfree
+from repro.core.rmw_sharded import rmw_sharded
 from repro.models.config import ModelConfig
 from repro.models.layers import dense_init, mlp_apply, mlp_init
-from repro.sharding import active_mesh
+from repro.sharding import active_mesh, shard_map_compat as _shard_map
 
 Array = jax.Array
-
-
-def _shard_map(fn, mesh, in_specs, out_specs):
-    """jax.shard_map with a fallback for older jax (experimental module,
-    `check_rep` instead of `check_vma`)."""
-    if hasattr(jax, "shard_map"):
-        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
-                             out_specs=out_specs, check_vma=False)
-    from jax.experimental.shard_map import shard_map
-    return shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                     check_rep=False)
 
 
 # ---------------------------------------------------------------------------
@@ -128,9 +130,17 @@ def _priority_rank(expert_ids: Array, gates: Array, policy: str,
 
 def _dispatch_compute(x2d: Array, params_local: dict, cfg: ModelConfig,
                       n_shards: int, capacity: int, axis: Optional[str],
-                      act: str):
+                      act: str, replica_axes: Tuple[str, ...] = (),
+                      global_capacity: Optional[int] = None):
     """x2d: (T, d) local tokens.  params_local hold E_loc experts.  When
-    `axis` is set, runs the EP all_to_all over that mesh axis."""
+    `axis` is set, runs the EP all_to_all over that mesh axis.
+
+    `replica_axes` are data-parallel axes whose devices hold *distinct*
+    tokens (writers into the shared expert counters); `global_capacity`
+    enables the sharded-FAA overflow filter for the arrival-order policy
+    (None = local-only capacity, e.g. when token replication would make
+    global ranks meaningless).
+    """
     m = cfg.moe
     t, d = x2d.shape
     e, e_loc = m.n_experts, m.n_experts // n_shards
@@ -140,6 +150,30 @@ def _dispatch_compute(x2d: Array, params_local: dict, cfg: ModelConfig,
     flat_ids = ids.reshape(-1)                              # (T*k,)
     rank = _priority_rank(ids, gates, m.overflow_policy, m.n_experts)
     keep = rank < capacity
+
+    if axis is not None:
+        # expert counts: a pure-FAA table-only batch against the count table
+        # sharded over the EP axis — the dense psum_scatter degenerate path.
+        # Replaces the old `psum` of one-hot sums; the aux-loss value is
+        # unchanged (replicated writers are excluded instead of the psum's
+        # uniform over-count, which the frac normalization cancelled).
+        mean_probs, _ = aux
+        cnt_shard = rmw_sharded(
+            jnp.zeros((e_loc,), jnp.float32), ids[:, 0],
+            jnp.ones((t,), jnp.float32), "faa", axis=axis,
+            replica_axes=replica_axes, strategy="dense", need_fetched=False)
+        counts = jax.lax.all_gather(cnt_shard.table, axis, tiled=True)
+        aux = (mean_probs, counts)
+        if global_capacity is not None \
+                and m.overflow_policy == "swp_drop_newest":
+            # capacity overflow, globally: each assignment's FAA fetch is its
+            # arrival rank across ALL writers (fsdp-major, model-minor device
+            # order) — the mesh-wide version of the local FAA-fetch rank.
+            gres = rmw_sharded(
+                jnp.zeros((e_loc,), jnp.int32), flat_ids,
+                jnp.ones((t * k,), jnp.int32), "faa", axis=axis,
+                replica_axes=replica_axes, need_fetched=True)
+            keep = keep & (gres.fetched < global_capacity)
 
     # slot in the send buffer: (dest shard, expert-local row, capacity slot)
     dest = flat_ids // e_loc
@@ -234,6 +268,13 @@ def moe_ffn(params: dict, x: Array, cfg: ModelConfig
         cap = _capacity(t_loc, m, ep)
         fsdp_spec = dp_axes
 
+        # distinct-token writers: dp shards when the batch splits, model
+        # shards when the sequence splits; replicated tokens are excluded so
+        # the shared counters aren't double-counted
+        replica_axes = dp_axes if b_split else ()
+        cap_global = (_capacity(t_loc * ep * (dp_size if b_split else 1),
+                                m, 1) if seq_split else None)
+
         def shard_fn(xs, router, w1, w3, w2):
             w1 = jax.lax.all_gather(w1, fsdp_spec, axis=1, tiled=True)
             w3 = jax.lax.all_gather(w3, fsdp_spec, axis=1, tiled=True)
@@ -242,9 +283,11 @@ def moe_ffn(params: dict, x: Array, cfg: ModelConfig
             bl, sl, dl = xs.shape
             out2d, (mp, cnt) = _dispatch_compute(
                 xs.reshape(bl * sl, dl), p_local, cfg, ep, cap, "model",
-                cfg.mlp_act)
+                cfg.mlp_act, replica_axes=replica_axes,
+                global_capacity=cap_global)
             mp = jax.lax.pmean(mp, ("model",) + fsdp_spec)
-            cnt = jax.lax.psum(cnt, ("model",) + fsdp_spec)
+            # cnt comes back already global: the sharded-FAA count table is
+            # psum_scatter-combined over every distinct-token writer
             return out2d.reshape(bl, sl, dl), mp, cnt
 
         out, mp, cnt = _shard_map(

@@ -55,6 +55,18 @@ def active_mesh() -> Optional[Mesh]:
     return _current()[0]
 
 
+def shard_map_compat(fn, mesh: Mesh, in_specs, out_specs):
+    """jax.shard_map with a fallback for older jax (experimental module,
+    `check_rep` instead of `check_vma`).  The single home for this
+    version-dependent compat logic — use it instead of re-wrapping."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map
+    return shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                     check_rep=False)
+
+
 def logical_to_physical(logical: Sequence[Optional[str]],
                         shape: Sequence[int]) -> P:
     """Resolve logical names to a PartitionSpec, dropping non-divisible axes."""
@@ -122,4 +134,7 @@ DEFAULT_RULES: Dict[str, AxisVal] = {
     "layers": None,
     "kv_seq": None,
     "state": None,
+    # RMW tables (core/rmw_sharded.py): owner-major over the EP/model axis,
+    # matching the subsystem's slot->shard layout (g // m_local)
+    "rmw_table": "model",
 }
