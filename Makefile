@@ -2,13 +2,27 @@ PYTHON ?= python
 # src for the repro package, repo root for the benchmarks package
 export PYTHONPATH := src:.:$(PYTHONPATH)
 
-.PHONY: test test-tier1 smoke bench-rmw bench-rmw-sharded calibrate
+.PHONY: test test-tier1 test-deprecations smoke bench-rmw \
+        bench-rmw-sharded bench-atomics calibrate
 
 # Tier-1 gate + benchmark smoke (what CI runs).
 test: test-tier1 smoke
 
 test-tier1:
 	$(PYTHON) -m pytest -x -q
+
+# Deprecation lane (CI): the RMW surface + examples under
+# -W error::DeprecationWarning — no internal caller may reach the legacy
+# shims (rmw_run / rmw_execute / rmw_sharded / old arrival_rank names).
+# pytest.ini already errors on repro-originated deprecations in every run;
+# this lane widens that to ALL DeprecationWarnings over the atomics-facing
+# tests and drives an example end to end under the same flag.
+test-deprecations:
+	$(PYTHON) -m pytest -q -W error::DeprecationWarning \
+	  tests/test_atomics.py tests/test_rmw.py tests/test_rmw_engine.py \
+	  tests/test_bfs.py tests/test_moe.py
+	$(PYTHON) -W error::DeprecationWarning examples/sharded_atomics.py \
+	  --n-per-device 512 --table 1024
 
 # Fast benchmark smoke: latency + bandwidth + the sharded-RMW exchange
 # (exercises the serialized oracle, the combining path, the Pallas kernel,
@@ -23,6 +37,12 @@ bench-rmw:
 # Distributed shoot-out (8 fake devices); rewrites results/rmw_sharded.json.
 bench-rmw-sharded:
 	$(PYTHON) benchmarks/run.py --only rmw_sharded
+
+# Atomics front-end smoke: both execution tiers (engine backends + sharded
+# exchange strategies) exercised through repro.atomics.execute; writes the
+# *_fast.json variants, never the committed full-grid tables.
+bench-atomics:
+	$(PYTHON) benchmarks/run.py --fast --only rmw_backends,rmw_sharded
 
 # Fit + persist the container HardwareSpec (results/calibrated_spec.json).
 calibrate:

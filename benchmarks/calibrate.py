@@ -42,6 +42,7 @@ import numpy as np
 from benchmarks.common import Csv, time_s
 from benchmarks import latency as latency_bench
 from benchmarks.model_validation import TIER_MAP
+from repro import atomics
 from repro.core import perf_model, rmw_engine
 from repro.core.placement import Tier
 
@@ -61,9 +62,11 @@ def _bench_engine(backend: str, n: int, m: int, need_fetched: bool,
 
     @jax.jit
     def fn(t, i, v):
-        res = rmw_engine.rmw_execute(t, i, v, "faa", backend=backend,
-                                     need_fetched=need_fetched)
-        return res if need_fetched else res.table
+        res = atomics.execute(t, atomics.Faa(i, v), backend=backend,
+                              need_fetched=need_fetched)
+        if need_fetched:
+            return res.table.data, res.fetched, res.success
+        return res.table.data
 
     return _median_time(fn, table, idx, vals)
 

@@ -40,8 +40,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import Csv, time_s
+from repro import atomics
 from repro.core import rmw_engine
-from repro.core.rmw import arrival_rank as arrival_rank_argsort
 
 RESULT_PATH = os.path.join(os.path.dirname(__file__), "results",
                            "rmw_backends.json")
@@ -67,9 +67,11 @@ def _bench_backend(backend: str, op: str, table, idx, vals,
                    need_fetched: bool) -> float:
     @partial(jax.jit, static_argnames=())
     def fn(t, i, v):
-        res = rmw_engine.rmw_execute(t, i, v, op, backend=backend,
-                                     need_fetched=need_fetched)
-        return res if need_fetched else res.table
+        res = atomics.execute(t, atomics.OP_KINDS[op](i, v), backend=backend,
+                              need_fetched=need_fetched)
+        if need_fetched:
+            return res.table.data, res.fetched, res.success
+        return res.table.data
 
     # this container's timings swing +/-50% between runs; 5 reps + median
     # (time_s) keeps single outliers out of the committed table
@@ -122,11 +124,13 @@ def run(csv: Csv, fast: bool = False, out_path: str = RESULT_PATH
                 record("table_only", "faa", n, m, backend, t)
 
     # -- MoE hot path: arrival_rank argsort vs sort-free ------------------
+    # (one canonical function now: num_keys=None is the argsort fallback,
+    # num_keys=<static> the sort-free one-hot path)
     n_tok, n_exp = (8192, 64)
     keys = jnp.asarray(rng.integers(0, n_exp, n_tok), jnp.int32)
-    rank_argsort = jax.jit(arrival_rank_argsort)
+    rank_argsort = jax.jit(atomics.arrival_rank)
     t_sortrank = time_s(lambda: rank_argsort(keys), reps=3, warmup=2)
-    rank_sf = jax.jit(partial(rmw_engine.arrival_rank, num_keys=n_exp))
+    rank_sf = jax.jit(partial(atomics.arrival_rank, num_keys=n_exp))
     t_sfrank = time_s(lambda: rank_sf(keys), reps=3, warmup=2)
     csv.add("rmw_backends.arrival_rank.argsort", t_sortrank * 1e6,
             f"{t_sortrank / n_tok * 1e9:.1f} ns/key")

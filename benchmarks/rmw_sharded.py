@@ -43,7 +43,7 @@ import json, time
 import jax, jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
-from repro.core.rmw_sharded import rmw_sharded
+from repro import atomics
 
 FAST = %(fast)r
 mesh = jax.make_mesh((2, 4), ("pod", "dev"))
@@ -87,13 +87,16 @@ def bench(op, strategy, n_per, m, dist, need_fetched):
     vals_j = jnp.asarray(vals)
 
     def fn(t, i, v):
-        res = rmw_sharded(t, i[0], v[0], op,
-                          None if op != "cas" else jnp.float32(0.0),
-                          axis=("pod", "dev"), strategy=strategy,
-                          need_fetched=need_fetched)
+        tbl = atomics.AtomicTable(t, axis=("pod", "dev"))
+        if op == "cas":
+            aop = atomics.Cas(i[0], v[0], expected=jnp.float32(0.0))
+        else:
+            aop = atomics.OP_KINDS[op](i[0], v[0])
+        res = atomics.execute(tbl, aop, strategy=strategy,
+                              need_fetched=need_fetched)
         if need_fetched:
-            return res.table, res.fetched[None], res.success[None]
-        return res.table
+            return res.table.data, res.fetched[None], res.success[None]
+        return res.table.data
 
     out_specs = (SPEC, SPEC, SPEC) if need_fetched else SPEC
     jf = jax.jit(shard_map(fn, (SPEC, SPEC, SPEC), out_specs))

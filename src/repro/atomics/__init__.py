@@ -1,0 +1,58 @@
+"""Unified atomics front-end: ONE typed API over every RMW execution tier.
+
+The paper's central result is that FAA/SWP/CAS cost about the same on real
+hardware, so the primitive should be chosen by *semantics* and the execution
+strategy by *access pattern and coherence state* — never by the caller
+hand-picking an implementation.  This package is that methodology as an API:
+callers declare **what** they want done (a typed op batch against a typed
+table) and the existing cost tiers decide **how**:
+
+* local batches dispatch through the engine registry
+  (`core.rmw_engine.select_backend`: serialized oracle / argsort combiner /
+  sort-free blocked one-hot / Pallas MXU kernel);
+* batches issued inside ``shard_map`` against a mesh-sharded table dispatch
+  through the exchange strategies
+  (`core.rmw_sharded.select_exchange`: one-shot / hierarchical per-pod
+  combining / dense psum_scatter), including the owner-side oracle pass that
+  executes **per-op-expected CAS across shards** (the un-combinable "wasted
+  work" case, routed un-combined and resolved serially at the owner).
+
+Public surface::
+
+    from repro import atomics
+
+    table = atomics.make_table(4096, jnp.int32)        # sharding-aware
+    res = atomics.execute(table, atomics.Faa(idx, vals))
+    res.table          # AtomicTable with the updated array in .data
+    res.fetched        # per-op value observed before the op (serialized order)
+    res.success        # per-op bool (CAS: expected matched)
+
+    atomics.execute(table, atomics.Cas(idx, vals, expected=-1),
+                    need_fetched=False)                # table-only fast path
+    atomics.execute(table, atomics.Cas(idx, vals, expected=exp_array))
+                       # per-op expected: serialized-oracle semantics, local
+                       # AND across shards
+
+    atomics.arrival_rank(keys, num_keys)               # sort-free FAA-fetch
+
+Every result is bit-identical to `core.rmw.rmw_serialized` applied to the
+same batch (on a mesh: to the device-rank-ordered concatenation of the
+per-device batches — the arrival-order contract of `core.rmw_sharded`).
+
+The legacy entry points (`core.rmw.rmw`/`rmw_run`,
+`core.rmw_engine.rmw_execute`, `core.rmw_sharded.rmw_sharded`,
+both old ``arrival_rank`` functions) are deprecation shims around this
+package and will be removed one release after migration.
+"""
+
+from repro.atomics.ops import (  # noqa: F401
+    OP_KINDS, AtomicOp, Cas, Faa, Max, Min, Swp)
+from repro.atomics.table import AtomicTable, make_table  # noqa: F401
+from repro.atomics.execute import (  # noqa: F401
+    AtomicResult, arrival_rank, execute)
+
+__all__ = [
+    "AtomicOp", "Faa", "Swp", "Min", "Max", "Cas", "OP_KINDS",
+    "AtomicTable", "make_table",
+    "AtomicResult", "execute", "arrival_rank",
+]

@@ -1,0 +1,180 @@
+"""`execute`: one entry point over every RMW execution tier.
+
+Dispatch ladder (all decisions at trace time — shapes are static under jit):
+
+1. **Tier** — an :class:`~repro.atomics.table.AtomicTable` with mesh axes
+   (``table.axis``) executing *inside* ``shard_map`` routes to the sharded
+   subsystem (`core.rmw_sharded`); a local table routes to the engine
+   registry (`core.rmw_engine`).  A sharded table used outside ``shard_map``
+   is an error (the collectives need bound axis names), caught with a
+   guidance message instead of a cryptic NameError.
+2. **Strategy/backend** — within the tier, the cost models pick the
+   implementation: `select_backend` over the engine registry (serialized /
+   sort / one-hot / Pallas), `select_exchange` over the exchange strategies
+   (one-shot / hierarchical / dense), both overridable via the ``backend=``
+   and ``strategy=`` keywords.  ``distinct_slots`` feeds the exchange
+   selector's dynamic contention hint (an observed distinct-slot estimate,
+   e.g. the previous step's counts) to sharpen the one-shot-vs-hierarchical
+   crossover for skewed batches.
+3. **Semantics** — per-op-expected CAS (non-uniform `Cas`) runs on the
+   serialized oracle locally, and across shards via the owner-side oracle
+   pass over un-combined ops (see `core.rmw_sharded`).
+
+Every path returns results bit-identical to `core.rmw.rmw_serialized` on
+the same batch (sharded: on the device-rank-ordered concatenation — the
+arrival-order contract).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple, Optional, Sequence, Tuple, Union
+
+import jax
+
+from repro.atomics.ops import AtomicOp
+from repro.atomics.table import AtomicTable
+from repro.core import rmw as rmw_mod
+from repro.core import rmw_engine
+from repro.core.rmw_sharded import execute_sharded as _execute_sharded
+
+Array = jax.Array
+
+
+class AtomicResult(NamedTuple):
+    """Result of `execute`: the updated table handle + per-op outputs.
+
+    ``fetched[i]`` is the value op ``i`` observed *before* executing
+    (serialized order), ``success[i]`` its CAS outcome (always True for
+    non-CAS ops).  With ``need_fetched=False`` both are zero placeholders —
+    only ``table`` is meaningful.  When `execute` was given a *sequence* of
+    op batches, ``fetched``/``success`` are tuples, one entry per batch.
+    """
+
+    table: AtomicTable
+    fetched: Any
+    success: Any
+
+
+def _axis_names(table: AtomicTable) -> Tuple[str, ...]:
+    names: Tuple[str, ...] = ()
+    for group in (table.axis, table.replica_axes):
+        if group:
+            names += (group,) if isinstance(group, str) else tuple(group)
+    return names
+
+
+def _axes_bound(names: Tuple[str, ...]) -> bool:
+    """True iff every mesh axis name is bound in the current trace — i.e.
+    we are inside a ``shard_map`` (or pmap) that carries those axes."""
+    try:
+        for name in names:
+            jax.lax.axis_index(name)
+        return True
+    except NameError:
+        return False
+
+
+def _execute_one(table: AtomicTable, op: AtomicOp, *, need_fetched: bool,
+                 backend: str, strategy: str, spec,
+                 distinct_slots: Optional[int]):
+    if not isinstance(op, AtomicOp):
+        raise TypeError(
+            f"ops must be atomics.Faa/Swp/Min/Max/Cas instances, "
+            f"got {type(op).__name__}")
+    if table.is_sharded:
+        if not _axes_bound(_axis_names(table)):
+            raise ValueError(
+                f"AtomicTable is sharded over mesh axes {table.axis!r} but "
+                f"execute() was called outside shard_map — wrap the call in "
+                f"repro.sharding.shard_map_compat over those axes (the "
+                f"sharded tier uses collectives), or build a local table")
+        res = _execute_sharded(
+            table.data, op.indices, op.values, op.kind, op.expected,
+            axis=table.axis, replica_axes=table.replica_axes,
+            strategy=strategy, backend=backend, spec=spec,
+            need_fetched=need_fetched, distinct_slots=distinct_slots)
+    else:
+        if strategy != "auto" or distinct_slots is not None:
+            # exchange strategies/hints only exist on the sharded tier: a
+            # caller naming one against a local table almost certainly
+            # migrated an rmw_sharded call but forgot AtomicTable(axis=...)
+            # — running locally would silently skip the exchange (global
+            # indices past the local shard would just vanish as OOR drops).
+            raise ValueError(
+                f"strategy={strategy!r} / distinct_slots apply to the "
+                f"sharded tier only, but the table is local — wrap it as "
+                f"AtomicTable(data, axis=...) (and call inside shard_map) "
+                f"or drop the sharded-tier arguments")
+        res = rmw_engine.execute_backend(
+            table.data, op.indices, op.values, op.kind, op.expected,
+            backend=backend, spec=spec, need_fetched=need_fetched)
+    return table.with_data(res.table), res.fetched, res.success
+
+
+def execute(table: Union[AtomicTable, Array],
+            ops: Union[AtomicOp, Sequence[AtomicOp]], *,
+            need_fetched: bool = True, backend: str = "auto",
+            strategy: str = "auto", spec=None,
+            distinct_slots: Optional[int] = None) -> AtomicResult:
+    """Execute typed RMW op batches against a table, cost-model-routed.
+
+    Args:
+      table: an :class:`AtomicTable` (or a bare 1-D array, treated as a
+        local table).  Inside ``shard_map``, a sharded table's ``data`` is
+        the local shard and ``indices`` are *global* slot ids.
+      ops: one op batch (``atomics.Faa(idx, vals)`` ...) or a sequence,
+        applied in order against the running table.
+      need_fetched: False lets backends skip the per-op fetch machinery
+        (table-only fast paths); ``fetched``/``success`` are then zeros.
+      backend: engine backend for local execution and the pre-combine /
+        resolve passes of the sharded tier ("auto" = `select_backend`).
+      strategy: exchange strategy for the sharded tier ("auto" =
+        `select_exchange`); ignored for local tables.
+      spec: `perf_model.HardwareSpec` override for the cost models.
+      distinct_slots: optional observed estimate of distinct slots touched
+        per batch — the dynamic contention hint for `select_exchange`.
+
+    Returns:
+      :class:`AtomicResult`, bit-identical to the serialized oracle.
+    """
+    if not isinstance(table, AtomicTable):
+        table = AtomicTable(table)
+    if isinstance(ops, AtomicOp):
+        table, fetched, success = _execute_one(
+            table, ops, need_fetched=need_fetched, backend=backend,
+            strategy=strategy, spec=spec, distinct_slots=distinct_slots)
+        return AtomicResult(table, fetched, success)
+    ops = tuple(ops)
+    if not ops:
+        raise ValueError("ops is empty")
+    fetched_l, success_l = [], []
+    for op in ops:
+        table, fetched, success = _execute_one(
+            table, op, need_fetched=need_fetched, backend=backend,
+            strategy=strategy, spec=spec, distinct_slots=distinct_slots)
+        fetched_l.append(fetched)
+        success_l.append(success)
+    return AtomicResult(table, tuple(fetched_l), tuple(success_l))
+
+
+def arrival_rank(keys: Array, num_keys: Optional[int] = None, *,
+                 block: int = rmw_engine.DEFAULT_ONEHOT_BLOCK) -> Array:
+    """Per-element arrival order among equal keys (0-based) — canonical.
+
+    The FAA-fetch identity: ``rank[i]`` equals the fetched value of
+    ``FAA(counter[key[i]], 1)`` executed in element order — the primitive
+    MoE dispatch uses to assign each token its slot within its expert's
+    capacity buffer.
+
+    With ``num_keys`` (the static key-space size) the rank is computed
+    **sort-free**: a dense one-hot cumsum for small key spaces, the blocked
+    one-hot engine backend beyond.  Without it, falls back to the stable
+    argsort + segmented-scan path (the only remaining use of that
+    implementation — pass ``num_keys`` on hot paths).
+
+    Replaces both deprecated spellings: ``core.rmw.arrival_rank`` (argsort)
+    and ``core.rmw_engine.arrival_rank`` (sort-free, required num_keys).
+    """
+    if num_keys is None:
+        return rmw_mod._arrival_rank_argsort(keys)
+    return rmw_engine._arrival_rank_sortfree(keys, num_keys, block=block)

@@ -1,0 +1,160 @@
+"""Typed RMW op constructors — the declarative half of the atomics API.
+
+Each class is one *batch* of same-kind ops: ``indices[i]`` names the table
+slot the i-th op targets and ``values[i]`` its operand.  Semantics (all
+serialized-equivalent, in batch order):
+
+``Faa``   fetched = old, slot += value
+``Swp``   fetched = old, slot = value
+``Min``   fetched = old, slot = min(old, value)
+``Max``   fetched = old, slot = max(old, value)
+``Cas``   fetched = old; slot = value iff old == expected (success), else
+          unchanged (failure).  ``expected`` is either one shared scalar
+          (the combinable form: BFS set-if-unvisited, dispatch claims) or a
+          per-op array (the paper's "wasted work" case — priority CAS —
+          which executes on the serialized oracle, locally and across
+          shards).
+
+Ops are registered pytrees, so they can cross ``jit``/``shard_map``
+boundaries like any other JAX value.
+"""
+
+from __future__ import annotations
+
+from typing import ClassVar, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _as_1d(name: str, x) -> Array:
+    x = jnp.asarray(x)
+    if x.ndim != 1:
+        raise ValueError(f"{name} must be 1-D, got shape {x.shape}")
+    return x
+
+
+class AtomicOp:
+    """Base class: one batch of same-kind RMW ops against one table."""
+
+    kind: ClassVar[str] = ""
+    __slots__ = ("indices", "values")
+
+    def __init__(self, indices, values):
+        self.indices = _as_1d("indices", indices)
+        self.values = _as_1d("values", values)
+        if self.indices.shape[0] != self.values.shape[0]:
+            raise ValueError(
+                f"indices and values disagree on batch size: "
+                f"{self.indices.shape[0]} vs {self.values.shape[0]}")
+
+    def __repr__(self):
+        return (f"{type(self).__name__}(n={self.indices.shape[0]}, "
+                f"dtype={self.values.dtype})")
+
+    # --- contract hooks the executor reads -------------------------------
+    @property
+    def expected(self) -> Optional[Array]:
+        return None
+
+    @property
+    def uniform_expected(self) -> bool:
+        """True when the op batch is combinable (non-CAS, scalar expected)."""
+        return True
+
+    # --- pytree protocol --------------------------------------------------
+    def tree_flatten(self) -> Tuple[tuple, None]:
+        return (self.indices, self.values), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        obj = object.__new__(cls)
+        obj.indices, obj.values = children
+        return obj
+
+
+@jax.tree_util.register_pytree_node_class
+class Faa(AtomicOp):
+    """Fetch-and-add: slot += value, fetched = pre-op value."""
+
+    kind: ClassVar[str] = "faa"
+    __slots__ = ()
+
+
+@jax.tree_util.register_pytree_node_class
+class Swp(AtomicOp):
+    """Swap: slot = value, fetched = pre-op value (last collider wins)."""
+
+    kind: ClassVar[str] = "swp"
+    __slots__ = ()
+
+
+@jax.tree_util.register_pytree_node_class
+class Min(AtomicOp):
+    """Atomic min: slot = min(slot, value), fetched = pre-op value."""
+
+    kind: ClassVar[str] = "min"
+    __slots__ = ()
+
+
+@jax.tree_util.register_pytree_node_class
+class Max(AtomicOp):
+    """Atomic max: slot = max(slot, value), fetched = pre-op value."""
+
+    kind: ClassVar[str] = "max"
+    __slots__ = ()
+
+
+@jax.tree_util.register_pytree_node_class
+class Cas(AtomicOp):
+    """Compare-and-swap: slot = value iff slot == expected.
+
+    ``expected`` may be a scalar (one shared expected value — the combinable
+    first-wins form every backend supports) or a per-op array of the same
+    length as ``values`` (serialized-oracle semantics; supported locally and
+    across shards via the owner-side oracle pass).
+    """
+
+    kind: ClassVar[str] = "cas"
+    __slots__ = ("_expected",)
+
+    def __init__(self, indices, values, *, expected):
+        super().__init__(indices, values)
+        if expected is None:
+            raise ValueError("Cas requires `expected`")
+        exp = jnp.asarray(expected)
+        if exp.ndim not in (0, 1):
+            raise ValueError(
+                f"expected must be a scalar or 1-D, got shape {exp.shape}")
+        if exp.ndim == 1 and exp.shape[0] != self.values.shape[0]:
+            raise ValueError(
+                f"per-op expected disagrees with batch size: "
+                f"{exp.shape[0]} vs {self.values.shape[0]}")
+        self._expected = exp
+
+    @property
+    def expected(self) -> Array:
+        return self._expected
+
+    @property
+    def uniform_expected(self) -> bool:
+        return jnp.ndim(self._expected) == 0
+
+    def tree_flatten(self):
+        return (self.indices, self.values, self._expected), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        del aux
+        obj = object.__new__(cls)
+        obj.indices, obj.values, obj._expected = children
+        return obj
+
+
+#: canonical op-kind -> constructor map (the single home for it — benchmarks
+#: and tests build ops from legacy op strings through this).  ``Cas`` takes
+#: its extra ``expected=`` keyword; the rest are (indices, values).
+OP_KINDS = {"faa": Faa, "swp": Swp, "min": Min, "max": Max, "cas": Cas}

@@ -1,0 +1,143 @@
+"""AtomicTable: the typed table handle the atomics executor operates on.
+
+An :class:`AtomicTable` bundles the table array with its *distribution
+contract*: which mesh axes shard it (owner-major: global slot ``g`` lives on
+shard ``g // m_local``) and which axes replicate it (every replica holds the
+same shard; writers on all replicas serialize replica-major).  ``axis=None``
+means a purely local table.
+
+The handle is a registered pytree whose only leaf is ``data``, so it passes
+through ``jit`` / ``shard_map`` like a plain array while carrying the
+sharding metadata in the (static) treedef — inside ``shard_map``, ``data``
+is this device's local shard and ``axis`` still names the mesh axes, which
+is exactly what the sharded executor needs.
+
+:func:`make_table` is the sharding-aware constructor: with an active mesh
+(``repro.sharding.use_mesh``) it places the array via the ``"rmw_table"``
+logical-axis rule (`sharding.DEFAULT_RULES`) and records the resolved mesh
+axes on the handle; without a mesh it returns a local table.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+from repro import sharding as shardlib
+
+Array = jax.Array
+AxisNames = Union[str, Tuple[str, ...]]
+
+#: the logical axis name RMW tables shard over (see sharding.DEFAULT_RULES)
+TABLE_LOGICAL_AXIS = "rmw_table"
+
+
+@jax.tree_util.register_pytree_node_class
+class AtomicTable:
+    """A 1-D table of atomic slots plus its mesh-distribution contract.
+
+    Attributes:
+      data:          the table array (inside ``shard_map``: the local shard).
+      axis:          mesh axis name(s) the table is sharded over, or None
+                     for a local table.
+      replica_axes:  mesh axes over which the table is *replicated*; writers
+                     on every replica serialize in replica-major order.
+    """
+
+    __slots__ = ("data", "axis", "replica_axes")
+
+    def __init__(self, data: Array, *, axis: Optional[AxisNames] = None,
+                 replica_axes: AxisNames = ()):
+        data = jnp.asarray(data)
+        if data.ndim != 1:
+            raise ValueError(f"AtomicTable data must be 1-D, "
+                             f"got shape {data.shape}")
+        self.data = data
+        self.axis = _norm_axes(axis)
+        self.replica_axes = _norm_axes(replica_axes) or ()
+        if self.replica_axes and self.axis is None:
+            # replica serialization is a property of the *sharded* executor;
+            # accepting it on a local table would silently drop the
+            # replica-major write contract (each replica would just apply
+            # its own batch to its own copy).
+            raise ValueError(
+                "replica_axes requires axis: a table replicated over mesh "
+                "axes must also name the axes it is sharded over (use "
+                "axis=... ; for a purely local table drop replica_axes)")
+
+    # --- conveniences -----------------------------------------------------
+    @property
+    def shape(self) -> Tuple[int, ...]:
+        return self.data.shape
+
+    @property
+    def dtype(self):
+        return self.data.dtype
+
+    @property
+    def is_sharded(self) -> bool:
+        return self.axis is not None
+
+    def with_data(self, data: Array) -> "AtomicTable":
+        """Same distribution contract, new contents (functional update)."""
+        new = object.__new__(AtomicTable)
+        new.data = data
+        new.axis = self.axis
+        new.replica_axes = self.replica_axes
+        return new
+
+    def __repr__(self):
+        where = f"sharded over {self.axis!r}" if self.axis else "local"
+        rep = f", replicated over {self.replica_axes!r}" \
+            if self.replica_axes else ""
+        return (f"AtomicTable({self.data.shape[0]} x {self.data.dtype}, "
+                f"{where}{rep})")
+
+    # --- pytree protocol --------------------------------------------------
+    def tree_flatten(self):
+        return (self.data,), (self.axis, self.replica_axes)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        new = object.__new__(cls)
+        new.data = children[0]
+        new.axis, new.replica_axes = aux
+        return new
+
+
+def _norm_axes(axis) -> Optional[AxisNames]:
+    if axis is None:
+        return None
+    if isinstance(axis, str):
+        return axis
+    return tuple(axis)
+
+
+def make_table(num_slots: int, dtype=jnp.int32, *, fill=0,
+               logical: str = TABLE_LOGICAL_AXIS,
+               replica_axes: AxisNames = ()) -> AtomicTable:
+    """Build a table, sharded per the active mesh's ``"rmw_table"`` rule.
+
+    With a mesh installed (``sharding.use_mesh``), the array is placed with
+    ``named_sharding((logical,), ...)`` — owner-major over the mesh axes the
+    rule resolves to (dropped when ``num_slots`` does not divide them, like
+    every logical-axis hint) — and the handle records those axes so
+    `repro.atomics.execute` can route through the sharded tier inside
+    ``shard_map``.  Without a mesh this is a plain local table.
+    """
+    data = jnp.full((num_slots,), fill, dtype)
+    mesh_axis = None
+    if shardlib.active_mesh() is not None:
+        ns = shardlib.named_sharding((logical,), (num_slots,))
+        mesh_axis = ns.spec[0] if len(ns.spec) >= 1 else None
+        if mesh_axis is not None:
+            data = jax.device_put(data, ns)
+    if replica_axes and mesh_axis is None:
+        raise ValueError(
+            f"replica_axes={replica_axes!r} cannot be honoured: the "
+            f"{logical!r} rule resolved to no mesh axes here (no active "
+            f"mesh, or {num_slots} does not divide them), so the table "
+            f"would be local and the replica-major write contract lost")
+    return AtomicTable(data, axis=mesh_axis, replica_axes=replica_axes)

@@ -4,10 +4,12 @@ The paper's point: CAS/SWP/FAA cost the same, so pick the primitive whose
 *semantics* fit — for the bfs_tree parent array, CAS (set-if-unvisited) and
 SWP (swap + revert) give simple protocols while FAA needs a revert scheme.
 We reproduce the comparison with the vectorized combining RMW: per BFS
-level, all frontier edges issue parent-updates through the chosen combiner,
-executed by the RMW engine (`core.rmw_engine.rmw_execute`) — the cost-model
-auto-selected backend by default (typically the sort-free one-hot backend
-for frontier-sized batches), overridable per run for benchmarking.
+level, all frontier edges issue parent-updates through the chosen typed op
+(`repro.atomics.execute`) — the cost-model auto-selected backend by default
+(typically the sort-free one-hot backend for frontier-sized batches),
+overridable per run for benchmarking.  The sharded variant runs the same
+ops against an `AtomicTable` sharded over the mesh axis; `execute` detects
+the shard_map context and routes through the exchange strategies.
 
 Kronecker (RMAT) generator included — the paper benchmarks on Kronecker
 graphs that model heavy-tailed real-world graphs.
@@ -23,8 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.rmw_engine import rmw_execute
-from repro.core.rmw_sharded import rmw_sharded
+from repro import atomics
 
 Array = jax.Array
 
@@ -66,35 +67,35 @@ def _bfs_run(src: Array, dst: Array, root, n: int, op: str,
         cand_dst = jnp.where(active, dst, n)         # OOR -> dropped
         cand_par = src.astype(jnp.int32)
         if op == "cas":
-            res = rmw_execute(parent, cand_dst, cand_par, "cas",
-                              jnp.int32(-1), backend=backend,
-                              need_fetched=False)
-            new_parent = res.table
+            res = atomics.execute(
+                parent, atomics.Cas(cand_dst, cand_par, expected=-1),
+                backend=backend, need_fetched=False)
+            new_parent = res.table.data
         elif op == "swp":
             # swap unconditionally, then revert overwrites of visited nodes.
             # The restore value is the FIRST collider's fetched (the original
             # parent), so the revert stream runs reversed (last-wins of the
             # reversed order == first in program order).
-            res = rmw_execute(parent, cand_dst, cand_par, "swp",
-                              backend=backend)
+            res = atomics.execute(parent, atomics.Swp(cand_dst, cand_par),
+                                  backend=backend)
             visited_before = res.fetched != -1
             revert_idx = jnp.where(visited_before, cand_dst, n)
-            new_parent = rmw_execute(res.table, revert_idx[::-1],
-                                     res.fetched[::-1], "swp",
-                                     backend=backend,
-                                     need_fetched=False).table
+            new_parent = atomics.execute(
+                res.table, atomics.Swp(revert_idx[::-1], res.fetched[::-1]),
+                backend=backend, need_fetched=False).table.data
         else:  # faa with revert (the paper's "complex scheme")
             delta = jnp.where(parent[jnp.clip(cand_dst, 0, n - 1)] == -1,
                               cand_par + 1, 0)
-            res = rmw_execute(parent, cand_dst, delta, "faa",
-                              backend=backend, need_fetched=False)
-            over = res.table  # -1 + sum(deltas); keep first contributor only
+            res = atomics.execute(parent, atomics.Faa(cand_dst, delta),
+                                  backend=backend, need_fetched=False)
+            over = res.table.data  # -1 + sum(deltas); keep 1st contributor
             # revert: recompute exact winner via min-combine of parities
-            first = rmw_execute(
+            first = atomics.execute(
                 jnp.full((n,), jnp.iinfo(jnp.int32).max, jnp.int32),
-                cand_dst, jnp.where(delta > 0, cand_par,
-                                    jnp.iinfo(jnp.int32).max), "min",
-                backend=backend, need_fetched=False).table
+                atomics.Min(cand_dst,
+                            jnp.where(delta > 0, cand_par,
+                                      jnp.iinfo(jnp.int32).max)),
+                backend=backend, need_fetched=False).table.data
             new_parent = jnp.where(
                 (parent == -1) & (first != jnp.iinfo(jnp.int32).max),
                 first, parent)
@@ -132,8 +133,8 @@ def bfs_sharded(src: np.ndarray, dst: np.ndarray, n: int, root: int = 0,
     The parent array — the paper's contended cache line — is sharded over
     `axis` (vertex ``v`` owned by shard ``v // n_local``); edges are split
     over the same devices.  Each level gathers the frontier bitmap and issues
-    every frontier edge's ``cas(parent[dst], -1, src)`` through the sharded
-    RMW subsystem (`core.rmw_sharded`): per-device pre-combine (one CAS per
+    every frontier edge's ``Cas(dst, src, expected=-1)`` through the sharded
+    tier of `repro.atomics.execute`: per-device pre-combine (one CAS per
     distinct destination survives), owner-shard resolve, table-only fast
     path.  Parent selection is identical to the single-device `bfs` because
     the arrival-order contract serializes edges in (device-rank, local)
@@ -158,13 +159,15 @@ def bfs_sharded(src: np.ndarray, dst: np.ndarray, n: int, root: int = 0,
             fg = jax.lax.all_gather(frontier, axis, tiled=True)  # (n_pad,)
             active = fg[jnp.clip(s, 0, n_pad - 1)] & (s < n_pad)
             cand = jnp.where(active, d, n_pad)                   # OOR drops
-            res = rmw_sharded(parent, cand, s, "cas", jnp.int32(-1),
-                              axis=axis, strategy=strategy,
-                              need_fetched=False)
-            newf = (res.table != -1) & (parent == -1)
+            res = atomics.execute(
+                atomics.AtomicTable(parent, axis=axis),
+                atomics.Cas(cand, s, expected=jnp.int32(-1)),
+                strategy=strategy, need_fetched=False)
+            new_parent = res.table.data
+            newf = (new_parent != -1) & (parent == -1)
             edges = edges + jax.lax.psum(jnp.sum(active), axis)
             more = jax.lax.psum(jnp.sum(newf), axis) > 0
-            return res.table, newf, lvl + jnp.int32(1), edges, more
+            return new_parent, newf, lvl + jnp.int32(1), edges, more
         def cond(state):
             _, _, lvl, _, more = state
             return more & (lvl < max_levels)

@@ -13,15 +13,15 @@ semantics).  This module provides:
   For FAA/SWP/MIN/MAX and for CAS with a uniform expected value it returns
   exactly the serialized result (property-tested in tests/test_rmw.py).
 
-Shared helpers (`segmented_scan`, `arrival_rank`) are reused by the MoE
-dispatch (position-in-expert counters = FAA fetch results) and the BFS
-example (parent updates = CAS/SWP).
+Shared helpers (`segmented_scan`, the argsort arrival rank behind
+`repro.atomics.arrival_rank`) are reused by the MoE dispatch
+(position-in-expert counters = FAA fetch results) and the BFS example
+(parent updates = CAS/SWP).
 
 This module holds the *sort* (argsort + segmented scan) implementation and
-the serialized oracle.  The hot-path entry point is `core.rmw_engine`, which
-adds a sort-free blocked one-hot backend and the Pallas MXU kernel behind a
-cost-model-driven backend registry; `rmw()` below dispatches there for the
-non-legacy modes ("auto", "onehot", "pallas").
+the serialized oracle — implementation building blocks for the engine
+(`core.rmw_engine`) and the unified front-end (`repro.atomics`, the one
+public entry).  The old `rmw()` facade below is a deprecation shim.
 """
 
 from __future__ import annotations
@@ -81,18 +81,30 @@ def _sort_by_index(indices: Array, *arrays: Array):
     return order, inv, sorted_idx, seg_start, tuple(a[order] for a in arrays)
 
 
-def arrival_rank(keys: Array, num_keys: Optional[int] = None) -> Array:
-    """Per-element arrival order among equal keys (0-based).
+def _arrival_rank_argsort(keys: Array) -> Array:
+    """Per-element arrival order among equal keys (0-based), via argsort.
 
     Semantically this is the fetch result of FAA(counter[key], 1) executed in
     element order — the exact primitive MoE dispatch uses to assign each token
-    its slot within its expert's capacity buffer.
+    its slot within its expert's capacity buffer.  The sort-free version
+    lives in the engine; `repro.atomics.arrival_rank` is the one public
+    spelling (this path is its ``num_keys=None`` fallback).
     """
-    del num_keys
     order, inv, _, seg_start, _ = _sort_by_index(keys)
     ones = jnp.ones_like(keys, dtype=jnp.int32)
     incl = segmented_scan(ones, seg_start, jnp.add)
     return (incl - 1)[inv]
+
+
+def arrival_rank(keys: Array, num_keys: Optional[int] = None) -> Array:
+    """Deprecated spelling — use `repro.atomics.arrival_rank`."""
+    import warnings
+    warnings.warn(
+        "repro.core.rmw.arrival_rank is deprecated; use "
+        "repro.atomics.arrival_rank (pass num_keys for the sort-free path)",
+        DeprecationWarning, stacklevel=2)
+    del num_keys
+    return _arrival_rank_argsort(keys)
 
 
 # ---------------------------------------------------------------------------
@@ -252,14 +264,20 @@ class RmwConfig:
 def rmw(table: Array, indices: Array, values: Array, op: str,
         expected: Optional[Array] = None,
         config: RmwConfig = RmwConfig()) -> RmwResult:
-    """Batch RMW with selectable execution mode (see module docstring)."""
+    """Deprecated facade (also re-exported as ``repro.core.rmw_run``) — use
+    `repro.atomics.execute` with typed ops; ``config.mode`` maps to its
+    ``backend=`` keyword ("combining" -> "sort", "serialized" stays)."""
+    import warnings
+    warnings.warn(
+        "repro.core.rmw_run / repro.core.rmw.rmw is deprecated; use "
+        "repro.atomics.execute", DeprecationWarning, stacklevel=2)
     if config.mode == "combining":
         return rmw_combining(table, indices, values, op, expected)
     if config.mode == "serialized":
         return rmw_serialized(table, indices, values, op, expected)
     from repro.core import rmw_engine  # deferred: engine imports this module
-    return rmw_engine.rmw_execute(table, indices, values, op, expected,
-                                  backend=config.mode)
+    return rmw_engine.execute_backend(table, indices, values, op, expected,
+                                      backend=config.mode)
 
 
 def scatter_add_grads(grad_table: Array, token_ids: Array,
@@ -267,31 +285,3 @@ def scatter_add_grads(grad_table: Array, token_ids: Array,
     """Embedding-gradient accumulation = a pure-FAA RMW batch (dense archs'
     use of the paper technique; DESIGN.md §5)."""
     return grad_table.at[token_ids].add(grads)
-
-
-# ---------------------------------------------------------------------------
-# Deprecation shim: `repro.core` used to re-export the *function* `rmw` under
-# the same name as this module, so `from repro.core import rmw` yielded the
-# function and shadowed the module.  The package now exports the function as
-# `rmw_run` and leaves this attribute as the module — but to keep old callers
-# alive, the module itself stays callable (with a DeprecationWarning).
-# ---------------------------------------------------------------------------
-
-def _install_callable_module() -> None:
-    import sys
-    import types
-    import warnings
-
-    class _CallableRmwModule(types.ModuleType):
-        def __call__(self, *args, **kwargs):
-            warnings.warn(
-                "calling `repro.core.rmw` as a function is deprecated: "
-                "`from repro.core import rmw` now yields the module; use "
-                "`repro.core.rmw_run` or `repro.core.rmw.rmw` instead",
-                DeprecationWarning, stacklevel=2)
-            return rmw(*args, **kwargs)
-
-    sys.modules[__name__].__class__ = _CallableRmwModule
-
-
-_install_callable_module()

@@ -34,9 +34,10 @@ oracle.
 Selection (`select_backend`) is the paper's L(A, S) model used as an actual
 runtime decision procedure: each backend exposes a predicted cost built from
 :class:`repro.core.perf_model.HardwareSpec` constants (op, batch size, table
-size -> seconds), and the cheapest *correct* backend wins.  ``rmw_execute``
-is the public entry; `arrival_rank` is the sort-free FAA-fetch rank used by
-MoE dispatch.  The constants were tuned from the committed
+size -> seconds), and the cheapest *correct* backend wins.  ``execute_backend``
+is the canonical entry, reached through the unified front-end
+`repro.atomics.execute` (the old ``rmw_execute`` / ``arrival_rank`` names are
+deprecation shims).  The constants were tuned from the committed
 ``benchmarks/results/rmw_backends.json`` sweep (see README "RMW engine").
 """
 
@@ -44,6 +45,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
+import warnings
 from functools import partial
 from typing import Callable, Dict, Optional
 
@@ -207,15 +209,16 @@ def _tables_only(table: Array, indices: Array, values: Array, op: str,
 
 
 @partial(jax.jit, static_argnames=("num_keys", "block"))
-def arrival_rank(keys: Array, num_keys: int, *,
-                 block: int = DEFAULT_ONEHOT_BLOCK) -> Array:
+def _arrival_rank_sortfree(keys: Array, num_keys: int, *,
+                           block: int = DEFAULT_ONEHOT_BLOCK) -> Array:
     """Sort-free per-element arrival order among equal keys (0-based).
 
     The FAA-fetch identity: rank[i] = fetched value of FAA(counter[key], 1)
     executed in element order.  For small key spaces a dense one-hot cumsum
     (one associative scan, MXU/VPU friendly) wins; for large ones the blocked
     one-hot backend computes the same thing without materializing (n, K).
-    Replaces `core.rmw.arrival_rank`'s argsort for hot callers (MoE dispatch).
+    Public spelling: `repro.atomics.arrival_rank` (this module's old
+    `arrival_rank` name is a deprecation shim around this function).
     """
     n = keys.shape[0]
     k = jnp.asarray(keys, jnp.int32)
@@ -226,6 +229,16 @@ def arrival_rank(keys: Array, num_keys: int, *,
     res = rmw_onehot(jnp.zeros((num_keys,), jnp.int32), k,
                      jnp.ones((n,), jnp.int32), "faa", block=block)
     return res.fetched
+
+
+def arrival_rank(keys: Array, num_keys: int, *,
+                 block: int = DEFAULT_ONEHOT_BLOCK) -> Array:
+    """Deprecated spelling of the sort-free rank — use
+    `repro.atomics.arrival_rank` (same signature, ``num_keys`` optional)."""
+    warnings.warn(
+        "repro.core.rmw_engine.arrival_rank is deprecated; use "
+        "repro.atomics.arrival_rank", DeprecationWarning, stacklevel=2)
+    return _arrival_rank_sortfree(keys, num_keys, block=block)
 
 
 # ---------------------------------------------------------------------------
@@ -428,11 +441,16 @@ def select_backend(op: str, n: int, m: int,
                key=lambda b: b.cost(spec, op, n, m, need_fetched)).name
 
 
-def rmw_execute(table: Array, indices: Array, values: Array, op: str,
-                expected: Optional[Array] = None, *, backend: str = "auto",
-                spec: Optional[perf_model.HardwareSpec] = None,
-                need_fetched: bool = True) -> RmwResult:
+def execute_backend(table: Array, indices: Array, values: Array, op: str,
+                    expected: Optional[Array] = None, *,
+                    backend: str = "auto",
+                    spec: Optional[perf_model.HardwareSpec] = None,
+                    need_fetched: bool = True) -> RmwResult:
     """Run an RMW batch on the named backend ("auto" = cost-model pick).
+
+    The local tier of the unified front-end — call it through
+    `repro.atomics.execute`; this raw-array spelling is the internal entry
+    the sharded subsystem's pre-combine/resolve passes use.
 
     Shapes are static under jit, so auto-selection happens at trace time and
     costs nothing at runtime.  All backends return the serialized-equivalent
@@ -465,3 +483,18 @@ def rmw_execute(table: Array, indices: Array, values: Array, op: str,
             f"`expected`; per-op expected arrays need the serialized oracle")
     return b.run(table, indices, values, op, expected,
                  need_fetched=need_fetched)
+
+
+def rmw_execute(table: Array, indices: Array, values: Array, op: str,
+                expected: Optional[Array] = None, *, backend: str = "auto",
+                spec: Optional[perf_model.HardwareSpec] = None,
+                need_fetched: bool = True) -> RmwResult:
+    """Deprecated spelling of `execute_backend` — use
+    `repro.atomics.execute` (typed ops, tier auto-detection)."""
+    warnings.warn(
+        "repro.core.rmw_engine.rmw_execute is deprecated; use "
+        "repro.atomics.execute (or execute_backend for the raw-array "
+        "engine entry)", DeprecationWarning, stacklevel=2)
+    return execute_backend(table, indices, values, op, expected,
+                           backend=backend, spec=spec,
+                           need_fetched=need_fetched)

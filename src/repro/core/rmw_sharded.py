@@ -14,7 +14,8 @@ Protocol (one exchange level)::
     phase 1 — pre-combine   each device sorts its local batch by global slot
                             and collapses every same-slot group into ONE
                             combined op using the PR-1 engine
-                            (`rmw_engine.rmw_execute` on an identity table);
+                            (`rmw_engine.execute_backend` on an identity
+                            table);
                             group combination is closed under every supported
                             op (FAA: sum, SWP: last, MIN/MAX: min/max,
                             uniform-CAS: first value != expected, else
@@ -55,14 +56,18 @@ Strategies (`strategy=`):
                     crossover.
 
 Out-of-range indices are dropped (fetched 0 / success False), matching the
-engine's convention.  CAS supports the combinable *uniform* expected form
-only; per-op expected arrays cannot be pre-combined (the paper's "wasted
-work" case) and raise.
+engine's convention.  CAS supports both expected forms: the combinable
+*uniform* scalar (all strategies above) and **per-op expected arrays**,
+which cannot be pre-combined (the paper's "wasted work" case) and instead
+route every op raw to its owner for a serialized-oracle pass
+(`_execute_cas_perop` — the owner-side form of the paper's §6.2
+remote-execution atomics).
 
-All public entry points must be called INSIDE `shard_map` (they use
-collectives over the named axes).  `indices` are **global** slot ids; the
-table argument is the caller's local shard (owner-major layout: global slot
-``g`` lives on shard ``g // m_local`` at row ``g % m_local``).
+All entry points must be called INSIDE `shard_map` (they use collectives
+over the named axes); the public spelling is `repro.atomics.execute`, which
+auto-detects that context.  `indices` are **global** slot ids; the table
+argument is the caller's local shard (owner-major layout: global slot ``g``
+lives on shard ``g // m_local`` at row ``g % m_local``).
 """
 
 from __future__ import annotations
@@ -144,9 +149,9 @@ def _combine(gidx: Array, vals: Array, op: str, expected, *,
     ident = jnp.full((n,), _identity_base(op, vals.dtype, expected),
                      vals.dtype)
     exp = None if op != "cas" else jnp.asarray(expected, vals.dtype)
-    res = rmw_engine.rmw_execute(ident, seg_id, sval, op, exp,
-                                 backend=backend, spec=spec,
-                                 need_fetched=need_fetched)
+    res = rmw_engine.execute_backend(ident, seg_id, sval, op, exp,
+                                     backend=backend, spec=spec,
+                                     need_fetched=need_fetched)
     return _Combined(order=order, inv=inv, sidx=sidx, sval=sval,
                      seg_start=seg_start, seg_id=seg_id, combined=res.table,
                      loc_fetched=res.fetched, loc_success=res.success)
@@ -161,6 +166,28 @@ class _Stage(NamedTuple):
     comb: _Combined
     slotpos: Array      # per-op packed buffer position (scratch if not rep)
     m_global: int
+
+
+def _rank_slotpos(dest: Array, valid: Array, n_dest: int, cap: int) -> Array:
+    """Packed-exchange position per op: lane = destination rank, row = the
+    op's arrival rank among same-destination valid ops (the engine's own
+    sort-free FAA-fetch rank, so lanes fill densely in local order — the
+    arrival-order contract), scratch (= n_dest * cap) for invalid ops.
+
+    The single home for this packing: the combined (`_push`), naive
+    (`_push_naive`) and per-op-CAS (`_push_uncombined`) paths all route
+    through it, so the scratch/OOR convention cannot diverge between them.
+    """
+    key = jnp.where(valid, dest, n_dest)
+    rank = rmw_engine._arrival_rank_sortfree(key, n_dest + 1)
+    return jnp.where(valid, dest * cap + rank, n_dest * cap)
+
+
+def _scatter_padded(fill, dtype, slotpos: Array, x: Array,
+                    size: int) -> Array:
+    """Scatter ``x`` to ``slotpos`` in a ``fill``-initialized (size,)
+    buffer; position ``size`` is the dropped scratch row."""
+    return jnp.full((size + 1,), fill, dtype).at[slotpos].set(x)[:-1]
 
 
 def _route_pair(send_idx: Array, send_val: Array, axis: AxisNames,
@@ -196,17 +223,12 @@ def _push(gidx: Array, vals: Array, op: str, expected, *, axis: AxisNames,
     dest_s = dest[st.order]
     valid = st.sidx < m_global
     is_rep = st.seg_start & valid
-    # rank of each representative among same-destination reps, in sorted
-    # (slot) order — the engine's own sort-free FAA-fetch rank
-    key = jnp.where(is_rep, dest_s, n_dest)
-    rank = rmw_engine.arrival_rank(key, n_dest + 1)
     scratch = n_dest * cap
-    slotpos = jnp.where(is_rep, dest_s * cap + rank, scratch)
-    send_idx = jnp.full((scratch + 1,), m_global, jnp.int32
-                        ).at[slotpos].set(jnp.where(is_rep, st.sidx,
-                                                    m_global))[:-1]
-    send_val = jnp.zeros((scratch + 1,), vals.dtype
-                         ).at[slotpos].set(st.combined[st.seg_id])[:-1]
+    slotpos = _rank_slotpos(dest_s, is_rep, n_dest, cap)
+    send_idx = _scatter_padded(m_global, jnp.int32, slotpos,
+                               jnp.where(is_rep, st.sidx, m_global), scratch)
+    send_val = _scatter_padded(0, vals.dtype, slotpos,
+                               st.combined[st.seg_id], scratch)
     recv_idx, recv_val = _route_pair(send_idx, send_val, axis, n_dest, cap)
     stage = _Stage(axis=axis, n_dest=n_dest, cap=cap, comb=st,
                    slotpos=slotpos, m_global=m_global)
@@ -252,14 +274,19 @@ def _pop(stage: _Stage, bases_recv: Array, op: str, expected
 # The distributed executor
 # ---------------------------------------------------------------------------
 
-def rmw_sharded(table: Array, indices: Array, values: Array, op: str,
-                expected: Optional[Array] = None, *, axis: AxisNames,
-                replica_axes: AxisNames = (), strategy: str = "auto",
-                backend: str = "auto",
-                spec: Optional[perf_model.HardwareSpec] = None,
-                axis_tiers: Optional[Sequence[Tier]] = None,
-                need_fetched: bool = True) -> RmwResult:
+def execute_sharded(table: Array, indices: Array, values: Array, op: str,
+                    expected: Optional[Array] = None, *, axis: AxisNames,
+                    replica_axes: AxisNames = (), strategy: str = "auto",
+                    backend: str = "auto",
+                    spec: Optional[perf_model.HardwareSpec] = None,
+                    axis_tiers: Optional[Sequence[Tier]] = None,
+                    need_fetched: bool = True,
+                    distinct_slots: Optional[int] = None) -> RmwResult:
     """Execute an RMW batch against a mesh-sharded table (inside shard_map).
+
+    The distributed tier of the unified front-end — call it through
+    `repro.atomics.execute`; this raw-array spelling is the internal entry
+    (the old ``rmw_sharded`` name is a deprecation shim).
 
     `table` is this device's shard (global slot ``g`` owned by shard
     ``g // m_local``, shards laid out major-to-minor over the ``axis``
@@ -268,6 +295,19 @@ def rmw_sharded(table: Array, indices: Array, values: Array, op: str,
     writers on all replicas serialize replica-major; the updated shard is
     broadcast back so replicas stay identical.
 
+    CAS accepts both expected forms: a scalar (uniform — pre-combinable,
+    every strategy) or a per-op array, which cannot be pre-combined (the
+    paper's "wasted work" case) and instead routes every op *un-combined*
+    to its owner, which applies the serialized oracle over the received
+    batch in device-rank order.  On that path ``strategy`` is ignored and
+    ``backend`` must be "auto" or "serialized" (anything else raises, like
+    the local tier).
+
+    ``distinct_slots`` optionally feeds an observed distinct-slot estimate
+    (e.g. the previous step's counts) to `select_exchange`, sharpening the
+    one-shot-vs-hierarchical crossover for skewed batches; it never changes
+    results, only the ``strategy="auto"`` choice.
+
     Returns the PR-1 :class:`RmwResult` contract: results bit-identical to
     `rmw_serialized` on the device-rank-ordered concatenated batch (see
     module docstring), with `need_fetched=False` skipping the entire return
@@ -275,13 +315,8 @@ def rmw_sharded(table: Array, indices: Array, values: Array, op: str,
     """
     if op not in OPS:
         raise ValueError(f"unknown op {op!r}")
-    if op == "cas":
-        if expected is None:
-            raise ValueError("cas requires `expected`")
-        if jnp.ndim(expected) != 0:
-            raise ValueError(
-                "rmw_sharded supports CAS only with a scalar (uniform) "
-                "`expected`; per-op expected arrays cannot be pre-combined")
+    if op == "cas" and expected is None:
+        raise ValueError("cas requires `expected`")
     if strategy not in STRATEGIES:
         raise ValueError(f"unknown strategy {strategy!r}; have {STRATEGIES}")
 
@@ -294,11 +329,26 @@ def rmw_sharded(table: Array, indices: Array, values: Array, op: str,
     m_global = m_loc * n_shards
     n = int(indices.shape[0])
 
+    if op == "cas" and jnp.ndim(expected) != 0:
+        # the owner resolve is a serialized-oracle pass by construction —
+        # mirror the local tier's error instead of silently ignoring an
+        # explicit non-oracle backend override
+        if backend not in ("auto", "serialized"):
+            raise ValueError(
+                f"backend {backend!r} supports CAS only with a scalar "
+                f"(uniform) `expected`; per-op expected arrays execute on "
+                f"the serialized oracle at the owner shard")
+        return _execute_cas_perop(
+            table, indices, values, expected, shard_axes=shard_axes,
+            rep_axes=rep_axes, n_shards=n_shards, n_rep=n_rep, m_loc=m_loc,
+            m_global=m_global, need_fetched=need_fetched, spec=spec)
+
     if strategy == "auto":
         strategy = select_exchange(
             op, n, m_global, _mesh_axes(shard_axes, sizes, axis_tiers),
             spec=spec, need_fetched=need_fetched,
-            uniform_expected=True, replicas=n_rep)
+            uniform_expected=True, replicas=n_rep,
+            distinct_slots=distinct_slots)
     if strategy == "hierarchical" and len(shard_axes) < 2:
         strategy = "oneshot"
     if strategy == "dense" and not (op == "faa" and not need_fetched):
@@ -369,7 +419,7 @@ def rmw_sharded(table: Array, indices: Array, values: Array, op: str,
     # --- resolve at the owner ---------------------------------------------
     shard = jax.lax.axis_index(shard_axes)
     row = jnp.where(cur_idx < m_global, cur_idx - shard * m_loc, m_loc)
-    res = rmw_engine.rmw_execute(
+    res = rmw_engine.execute_backend(
         table, row, cur_vals, op,
         None if op != "cas" else jnp.asarray(expected, table.dtype),
         backend=backend, spec=spec, need_fetched=need_fetched)
@@ -400,15 +450,11 @@ def _push_naive(gidx, vals, op, expected, axis, n_shards, m_loc, m_global,
     n = gidx.shape[0]
     dest = jnp.minimum(gidx // m_loc, n_shards - 1)
     valid = gidx < m_global
-    key = jnp.where(valid, dest, n_shards)
-    rank = rmw_engine.arrival_rank(key, n_shards + 1)
     cap = n
     scratch = n_shards * cap
-    slotpos = jnp.where(valid, dest * cap + rank, scratch)
-    send_idx = jnp.full((scratch + 1,), m_global, jnp.int32
-                        ).at[slotpos].set(gidx)[:-1]
-    send_val = jnp.zeros((scratch + 1,), vals.dtype
-                         ).at[slotpos].set(vals)[:-1]
+    slotpos = _rank_slotpos(dest, valid, n_shards, cap)
+    send_idx = _scatter_padded(m_global, jnp.int32, slotpos, gidx, scratch)
+    send_val = _scatter_padded(0, vals.dtype, slotpos, vals, scratch)
     recv_idx, recv_val = _route_pair(send_idx, send_val, axis, n_shards, cap)
     comb = _Combined(order=jnp.arange(n), inv=jnp.arange(n), sidx=gidx,
                      sval=vals, seg_start=jnp.ones((n,), bool),
@@ -420,6 +466,139 @@ def _push_naive(gidx, vals, op, expected, axis, n_shards, m_loc, m_global,
     stage = _Stage(axis=axis, n_dest=n_shards, cap=cap, comb=comb,
                    slotpos=slotpos, m_global=m_global)
     return recv_idx, recv_val, [stage]
+
+
+# ---------------------------------------------------------------------------
+# Per-op-expected CAS: owner-side oracle pass over un-combined ops
+# ---------------------------------------------------------------------------
+
+def _route_flat(buf: Array, axis: AxisNames, n_dest: int, cap: int) -> Array:
+    """One padded all_to_all of a flat (n_dest * cap,) payload buffer."""
+    return jax.lax.all_to_all(buf.reshape(n_dest, cap), axis, split_axis=0,
+                              concat_axis=0).reshape(-1)
+
+
+def _route_cols(cols, axis: AxisNames, n_dest: int, cap: int):
+    """Move several same-length payload columns over one exchange.
+
+    4-byte columns ride together as one bitcast-packed (n_dest, cap, k)
+    buffer — ONE all_to_all launch total, the same single-launch pricing
+    `_route_pair` gets for its (id, value) rows; any wider dtype falls back
+    to one collective per column."""
+    if all(c.dtype.itemsize == 4 for c in cols):
+        bits = [jax.lax.bitcast_convert_type(c, jnp.int32) for c in cols]
+        packed = jnp.stack(bits, axis=-1).reshape(n_dest, cap, len(cols))
+        recv = jax.lax.all_to_all(packed, axis, split_axis=0,
+                                  concat_axis=0).reshape(-1, len(cols))
+        return tuple(jax.lax.bitcast_convert_type(recv[:, j], c.dtype)
+                     for j, c in enumerate(cols))
+    return tuple(_route_flat(c, axis, n_dest, cap) for c in cols)
+
+
+def _push_uncombined(gidx: Array, vals: Array, exps: Array, *,
+                     axis: AxisNames, n_dest: int, dest: Array,
+                     m_global: int):
+    """Route (slot id, value, expected) rows with NO pre-combining.
+
+    Like `_push_naive`, packing is by per-destination arrival rank over all
+    valid ops (cap = n, the un-combinable worst case), so the receiver sees
+    every individual op in source-rank-then-local order — exactly the
+    arrival-order contract.  Returns (slotpos, recv_idx, recv_val, recv_exp).
+    """
+    n = gidx.shape[0]
+    valid = gidx < m_global
+    cap = n
+    slotpos = _rank_slotpos(dest, valid, n_dest, cap)
+    scratch = n_dest * cap
+    send_idx = _scatter_padded(m_global, jnp.int32, slotpos, gidx, scratch)
+    send_val = _scatter_padded(0, vals.dtype, slotpos, vals, scratch)
+    send_exp = _scatter_padded(0, exps.dtype, slotpos, exps, scratch)
+    recv_idx, recv_val, recv_exp = _route_cols(
+        (send_idx, send_val, send_exp), axis, n_dest, cap)
+    return slotpos, recv_idx, recv_val, recv_exp
+
+
+def _execute_cas_perop(table: Array, indices: Array, values: Array,
+                       expected: Array, *, shard_axes: Tuple[str, ...],
+                       rep_axes: Tuple[str, ...], n_shards: int, n_rep: int,
+                       m_loc: int, m_global: int, need_fetched: bool,
+                       spec) -> RmwResult:
+    """Cross-shard CAS with per-op expected values (ROADMAP closure).
+
+    Per-op expected CAS chains do not compose associatively (the combined
+    effect of a group depends on each op's own expected value), so nothing
+    can be pre-combined — the paper's "wasted work" regime.  Instead every
+    op is routed raw to its owner shard (`_push_uncombined`, replica stage
+    included), which applies the **serialized oracle** — the only
+    general-CAS backend — over the received batch in device-rank order.
+    The owner's per-op fetched values ARE the final fetched values (no
+    local chain to recombine); success is recomputed at the source as
+    ``fetched == expected``.  Results are bit-identical to `rmw_serialized`
+    on the device-rank-ordered concatenated batch, same as every other op.
+    """
+    n = int(indices.shape[0])
+    gidx = indices.astype(jnp.int32)
+    gidx = jnp.where((gidx < 0) | (gidx >= m_global), m_global, gidx)
+    exp = jnp.asarray(expected, table.dtype)
+
+    stages = []                     # (axis, n_dest, cap, slotpos)
+    cur_idx, cur_val, cur_exp = gidx, values, exp
+    dest = jnp.minimum(cur_idx // m_loc, n_shards - 1)
+    slotpos, cur_idx, cur_val, cur_exp = _push_uncombined(
+        cur_idx, cur_val, cur_exp, axis=shard_axes, n_dest=n_shards,
+        dest=dest, m_global=m_global)
+    stages.append((shard_axes, n_shards, n, slotpos))
+    if rep_axes:                    # serialize replica groups at rank 0
+        n2 = int(cur_idx.shape[0])
+        dest_r = jnp.zeros((n2,), jnp.int32)
+        slotpos, cur_idx, cur_val, cur_exp = _push_uncombined(
+            cur_idx, cur_val, cur_exp, axis=rep_axes, n_dest=n_rep,
+            dest=dest_r, m_global=m_global)
+        stages.append((rep_axes, n_rep, n2, slotpos))
+
+    shard = jax.lax.axis_index(shard_axes)
+    row = jnp.where(cur_idx < m_global, cur_idx - shard * m_loc, m_loc)
+    res = rmw_engine.execute_backend(table, row, cur_val, "cas", cur_exp,
+                                     backend="serialized", spec=spec,
+                                     need_fetched=need_fetched)
+    new_table = res.table
+    if rep_axes:                    # broadcast replica rank 0's update
+        new_table = table + jax.lax.psum(new_table - table, rep_axes)
+
+    zero_f = jnp.zeros((n,), values.dtype)
+    zero_s = jnp.zeros((n,), bool)
+    if not need_fetched:
+        return RmwResult(new_table, zero_f, zero_s)
+
+    bases = res.fetched.astype(values.dtype)
+    for axis, n_dest, cap, slotpos in reversed(stages):
+        ret = _route_flat(bases, axis, n_dest, cap)
+        ret = jnp.concatenate([ret, jnp.zeros((1,), ret.dtype)])
+        bases = ret[slotpos]        # scratch -> 0
+    valid = gidx < m_global
+    fetched = jnp.where(valid, bases, zero_f)
+    success = valid & (bases == exp.astype(values.dtype))
+    return RmwResult(new_table, fetched, success)
+
+
+def rmw_sharded(table: Array, indices: Array, values: Array, op: str,
+                expected: Optional[Array] = None, *, axis: AxisNames,
+                replica_axes: AxisNames = (), strategy: str = "auto",
+                backend: str = "auto",
+                spec: Optional[perf_model.HardwareSpec] = None,
+                axis_tiers: Optional[Sequence[Tier]] = None,
+                need_fetched: bool = True) -> RmwResult:
+    """Deprecated spelling of `execute_sharded` — use
+    `repro.atomics.execute` (typed ops, shard_map auto-detection)."""
+    import warnings
+    warnings.warn(
+        "repro.core.rmw_sharded.rmw_sharded is deprecated; use "
+        "repro.atomics.execute (or execute_sharded for the raw-array "
+        "distributed entry)", DeprecationWarning, stacklevel=2)
+    return execute_sharded(table, indices, values, op, expected, axis=axis,
+                           replica_axes=replica_axes, strategy=strategy,
+                           backend=backend, spec=spec, axis_tiers=axis_tiers,
+                           need_fetched=need_fetched)
 
 
 # ---------------------------------------------------------------------------
@@ -491,12 +670,24 @@ def _rs_s(spec, nbytes: int, axes: Sequence[MeshAxis]) -> float:
     return t
 
 
+def _cap_hint(cap: int, distinct_slots: Optional[int]) -> int:
+    """Tighten a worst-case exchange cap with an observed distinct-slot
+    estimate (the dynamic contention hint): after pre-combining, at most one
+    row per distinct slot survives, so the *expected* payload is bounded by
+    the estimate even though the padded worst-case buffer is not.  Selection
+    only — the executor's real caps stay worst-case correct."""
+    if distinct_slots is None:
+        return cap
+    return max(1, min(cap, int(distinct_slots)))
+
+
 def cost_exchange_oneshot(spec, op: str, n: int, m_global: int,
                           axes: Sequence[MeshAxis],
-                          need_fetched: bool = True) -> float:
+                          need_fetched: bool = True,
+                          distinct_slots: Optional[int] = None) -> float:
     n_shards = math.prod(a.size for a in axes)
     m_loc = max(1, m_global // n_shards)
-    cap = min(n, m_loc)
+    cap = _cap_hint(min(n, m_loc), distinct_slots)
     t = _cost_engine(spec, op, n, n, need_fetched)           # pre-combine
     t += _a2a_s(spec, n_shards * cap * ROW_BYTES, axes)      # route
     t += _cost_engine(spec, op, n_shards * cap, m_loc, need_fetched)
@@ -508,15 +699,16 @@ def cost_exchange_oneshot(spec, op: str, n: int, m_global: int,
 
 def cost_exchange_hierarchical(spec, op: str, n: int, m_global: int,
                                axes: Sequence[MeshAxis],
-                               need_fetched: bool = True) -> float:
+                               need_fetched: bool = True,
+                               distinct_slots: Optional[int] = None) -> float:
     if len(axes) < 2:
         return float("inf")
     n_shards = math.prod(a.size for a in axes)
     n_outer = axes[0].size
     n_inner = n_shards // n_outer
     m_loc = max(1, m_global // n_shards)
-    cap1 = min(n, m_loc * n_outer)
-    cap2 = min(n_inner * cap1, m_loc)
+    cap1 = _cap_hint(min(n, m_loc * n_outer), distinct_slots)
+    cap2 = _cap_hint(min(n_inner * cap1, m_loc), distinct_slots)
     t = _cost_engine(spec, op, n, n, need_fetched)           # pre-combine
     t += _a2a_s(spec, n_inner * cap1 * ROW_BYTES, axes[1:])  # ICI to deputy
     t += _cost_engine(spec, op, n_inner * cap1, n_inner * cap1, need_fetched)
@@ -532,7 +724,9 @@ def cost_exchange_hierarchical(spec, op: str, n: int, m_global: int,
 
 def cost_exchange_naive(spec, op: str, n: int, m_global: int,
                         axes: Sequence[MeshAxis],
-                        need_fetched: bool = True) -> float:
+                        need_fetched: bool = True,
+                        distinct_slots: Optional[int] = None) -> float:
+    del distinct_slots              # no combining: every op ships regardless
     n_shards = math.prod(a.size for a in axes)
     m_loc = max(1, m_global // n_shards)
     t = _a2a_s(spec, n_shards * n * ROW_BYTES, axes)
@@ -544,7 +738,9 @@ def cost_exchange_naive(spec, op: str, n: int, m_global: int,
 
 def cost_exchange_dense(spec, op: str, n: int, m_global: int,
                         axes: Sequence[MeshAxis],
-                        need_fetched: bool = True) -> float:
+                        need_fetched: bool = True,
+                        distinct_slots: Optional[int] = None) -> float:
+    del distinct_slots              # dense path always moves the full table
     if op != "faa" or need_fetched:
         return float("inf")
     gather = spec.gather_elem_s or 2e-9
@@ -563,7 +759,8 @@ def select_exchange(op: str, n: int, m_global: int,
                     axes: Sequence[MeshAxis], *,
                     spec: Optional[perf_model.HardwareSpec] = None,
                     need_fetched: bool = True, uniform_expected: bool = True,
-                    replicas: int = 1, include_naive: bool = False) -> str:
+                    replicas: int = 1, include_naive: bool = False,
+                    distinct_slots: Optional[int] = None) -> str:
     """Cheapest distributed strategy for (op, n/device, table, topology).
 
     This is `select_backend`'s distributed tier: the same HardwareSpec
@@ -574,18 +771,30 @@ def select_exchange(op: str, n: int, m_global: int,
     unless `include_naive`: its padded exchange buffer is ``n_shards * n``
     rows, which is memory-hostile even in the cells where skipping the
     pre-combine pass would nominally win.
+
+    ``distinct_slots`` is the **dynamic contention hint** (ROADMAP): an
+    observed estimate of how many distinct slots the batch touches (e.g.
+    the previous step's counts).  The static costs assume the worst-case
+    exchange caps (bounded only by batch and table size); a skewed batch
+    that actually touches few slots pre-combines to almost nothing, where
+    the hierarchy's extra level of launches and engine passes no longer
+    pays for its DCN savings — the hint shifts that crossover.  Selection
+    only: results never depend on it.
     """
     if op not in OPS:
         raise ValueError(f"unknown op {op!r}")
     if op == "cas" and not uniform_expected:
-        raise ValueError("distributed CAS requires a uniform expected value")
+        raise ValueError(
+            "select_exchange prices pre-combined exchanges; per-op expected "
+            "CAS always executes on the un-combined owner-oracle path")
     spec = spec or rmw_engine.default_spec()
     del replicas  # the replica stage cost is identical across strategies
     best, best_t = "oneshot", float("inf")
     for name, fn in EXCHANGE_COSTS.items():
         if name == "naive" and not include_naive:
             continue
-        t = fn(spec, op, n, m_global, axes, need_fetched)
+        t = fn(spec, op, n, m_global, axes, need_fetched,
+               distinct_slots=distinct_slots)
         if t < best_t:
             best, best_t = name, t
     return best

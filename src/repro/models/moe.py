@@ -2,10 +2,11 @@
 
 The token->expert dispatch is the paper's contended-RMW workload (README
 "RMW engine"): each token's (expert, slot) assignment is a Fetch-and-Add on
-the expert's arrival counter.  The hot path runs on the sort-free RMW engine
-(`core.rmw_engine.arrival_rank`, a one-hot FAA fetch — no argsort); gate-
-priority ranking uses ONE fused lexicographic `lax.sort` instead of the
-previous triple argsort.  The *overflow policy* is a choice of RMW semantics:
+the expert's arrival counter.  The hot path runs on the unified atomics
+front-end (`repro.atomics.arrival_rank`, a sort-free one-hot FAA fetch — no
+argsort); gate-priority ranking uses ONE fused lexicographic `lax.sort`
+instead of the previous triple argsort.  The *overflow policy* is a choice
+of RMW semantics:
 
   * ``swp_drop_newest``     — arrival order wins (SWP: late colliders lose)
   * ``cas_keep_top_gate``   — gate priority wins (CAS: highest-priority
@@ -17,8 +18,8 @@ ZeRO-3 sharded over ("pod","data") and all-gathered per layer inside the
 shard (explicit FSDP).  Without a mesh the same routing runs in-process
 (smoke tests).
 
-The cross-device statistics run on the *sharded* RMW subsystem
-(`core.rmw_sharded`) instead of raw collectives: expert counts are a pure
+The cross-device statistics run on the *sharded* RMW tier of
+`repro.atomics.execute` instead of raw collectives: expert counts are a pure
 sharded FAA onto an expert-count table sharded over ``model`` (the
 ``psum_scatter`` degenerate path — what used to be a `psum` of dense
 one-hot sums), and the capacity-overflow decision for the arrival-order
@@ -26,8 +27,11 @@ policy uses the *fetched* values of a sharded FAA — each assignment's global
 arrival rank across every writer in the documented (fsdp-major, model-minor)
 device order, compared against the global capacity exactly like the
 single-device dispatch compares its local FAA fetch.  The gate-priority
-policy keeps local ranks: priority order is not an FAA; a cross-shard
-priority CAS is the per-op-expected follow-on in the ROADMAP.
+policy keeps local ranks: priority order is not an FAA.  (Per-op-expected
+CAS — the primitive a cross-shard priority resolution needs — is now
+available through `repro.atomics.execute` with ``Cas(expected=array)``;
+wiring the gate policy onto it is a behavioural change gated on a future
+quality study, not an API limitation anymore.)
 """
 
 from __future__ import annotations
@@ -38,9 +42,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core.rmw import arrival_rank, segmented_scan
-from repro.core.rmw_engine import arrival_rank as arrival_rank_sortfree
-from repro.core.rmw_sharded import rmw_sharded
+from repro import atomics
+from repro.core.rmw import segmented_scan
 from repro.models.config import ModelConfig
 from repro.models.layers import dense_init, mlp_apply, mlp_init
 from repro.sharding import active_mesh, shard_map_compat as _shard_map
@@ -107,9 +110,8 @@ def _priority_rank(expert_ids: Array, gates: Array, policy: str,
     flat_e = expert_ids.reshape(-1)
     n = flat_e.shape[0]
     if policy == "swp_drop_newest":
-        if num_experts is None:
-            return arrival_rank(flat_e)          # legacy argsort fallback
-        return arrival_rank_sortfree(flat_e, num_experts)
+        # sort-free with num_experts, argsort fallback without
+        return atomics.arrival_rank(flat_e, num_experts)
     # ranks are discrete routing decisions: no gradient flows through the
     # sort (grads reach the router through the gate weights only)
     flat_g = jax.lax.stop_gradient(gates.reshape(-1)).astype(jnp.float32)
@@ -158,21 +160,23 @@ def _dispatch_compute(x2d: Array, params_local: dict, cfg: ModelConfig,
         # unchanged (replicated writers are excluded instead of the psum's
         # uniform over-count, which the frac normalization cancelled).
         mean_probs, _ = aux
-        cnt_shard = rmw_sharded(
-            jnp.zeros((e_loc,), jnp.float32), ids[:, 0],
-            jnp.ones((t,), jnp.float32), "faa", axis=axis,
-            replica_axes=replica_axes, strategy="dense", need_fetched=False)
-        counts = jax.lax.all_gather(cnt_shard.table, axis, tiled=True)
+        cnt_table = atomics.AtomicTable(jnp.zeros((e_loc,), jnp.float32),
+                                        axis=axis, replica_axes=replica_axes)
+        cnt = atomics.execute(cnt_table, atomics.Faa(
+            ids[:, 0], jnp.ones((t,), jnp.float32)),
+            strategy="dense", need_fetched=False)
+        counts = jax.lax.all_gather(cnt.table.data, axis, tiled=True)
         aux = (mean_probs, counts)
         if global_capacity is not None \
                 and m.overflow_policy == "swp_drop_newest":
             # capacity overflow, globally: each assignment's FAA fetch is its
             # arrival rank across ALL writers (fsdp-major, model-minor device
             # order) — the mesh-wide version of the local FAA-fetch rank.
-            gres = rmw_sharded(
-                jnp.zeros((e_loc,), jnp.int32), flat_ids,
-                jnp.ones((t * k,), jnp.int32), "faa", axis=axis,
-                replica_axes=replica_axes, need_fetched=True)
+            rank_table = atomics.AtomicTable(jnp.zeros((e_loc,), jnp.int32),
+                                             axis=axis,
+                                             replica_axes=replica_axes)
+            gres = atomics.execute(rank_table, atomics.Faa(
+                flat_ids, jnp.ones((t * k,), jnp.int32)), need_fetched=True)
             keep = keep & (gres.fetched < global_capacity)
 
     # slot in the send buffer: (dest shard, expert-local row, capacity slot)

@@ -9,8 +9,8 @@ try:
 except ImportError:  # container image: fall back to the local shim
     from _hypothesis_shim import given, settings, strategies as st
 
-from repro.core.rmw import (arrival_rank, rmw_combining, rmw_serialized,
-                            segmented_scan)
+from repro.atomics import arrival_rank
+from repro.core.rmw import rmw_combining, rmw_serialized, segmented_scan
 
 SET = settings(max_examples=30, deadline=None)
 
@@ -61,7 +61,9 @@ def test_arrival_rank_is_faa_fetch(keys):
     counter = jnp.zeros((6,), jnp.int32)
     ones = jnp.ones((len(keys),), jnp.int32)
     ser = rmw_serialized(counter, k, ones, "faa")
+    # both the argsort fallback and the sort-free path
     np.testing.assert_array_equal(arrival_rank(k), ser.fetched)
+    np.testing.assert_array_equal(arrival_rank(k, 6), ser.fetched)
 
 
 @SET
@@ -112,7 +114,7 @@ def test_ilp_gap_measured():
     in benchmarks/results/rmw_backends.json."""
     import time
 
-    from repro.core.rmw_engine import rmw_execute
+    from repro.core.rmw_engine import execute_backend
 
     rng = np.random.default_rng(0)
     n = 262144
@@ -121,8 +123,8 @@ def test_ilp_gap_measured():
     vals = jnp.asarray(rng.normal(size=n), jnp.float32)
     f_ser = jax.jit(lambda: rmw_serialized(table, idx[:4096], vals[:4096],
                                            "faa").table)
-    f_comb = jax.jit(lambda: rmw_execute(table, idx, vals, "faa",
-                                         need_fetched=False).table)
+    f_comb = jax.jit(lambda: execute_backend(table, idx, vals, "faa",
+                                             need_fetched=False).table)
 
     def best_of(fn, reps=5):
         out = []

@@ -16,10 +16,11 @@ try:
 except ImportError:  # container image: fall back to the local shim
     from _hypothesis_shim import given, settings, strategies as st
 
+from repro.atomics import arrival_rank
 from repro.core import perf_model
 from repro.core.rmw import rmw_serialized
-from repro.core.rmw_engine import (BACKENDS, arrival_rank, rmw_execute,
-                                   rmw_onehot, select_backend)
+from repro.core.rmw_engine import (BACKENDS, execute_backend, rmw_onehot,
+                                   select_backend)
 from repro.kernels.rmw.ops import rmw_apply_fetched
 from repro.kernels.rmw.ref import rmw_table_fetched_ref
 
@@ -99,7 +100,7 @@ def test_backends_agree_collision_heavy(backend, op):
     vals = jnp.asarray(RNG.integers(-6, 7, n), jnp.int32)
     table = jnp.asarray(RNG.integers(-5, 6, m), jnp.int32)
     a = rmw_serialized(table, idx, vals, op)
-    b = rmw_execute(table, idx, vals, op, backend=backend)
+    b = execute_backend(table, idx, vals, op, backend=backend)
     _assert_same(a, b, f"{backend}:{op}")
 
 
@@ -111,7 +112,7 @@ def test_backends_cas_collision_heavy(backend):
     vals = jnp.asarray(RNG.integers(-1, 2, n), jnp.int32)
     table = jnp.asarray(RNG.integers(-1, 2, m), jnp.int32)
     a = rmw_serialized(table, idx, vals, "cas", jnp.zeros((n,), jnp.int32))
-    b = rmw_execute(table, idx, vals, "cas", jnp.int32(0), backend=backend)
+    b = execute_backend(table, idx, vals, "cas", jnp.int32(0), backend=backend)
     _assert_same(a, b, f"{backend}:cas")
 
 
@@ -123,7 +124,7 @@ def test_float_faa_close_across_backends():
     table = jnp.asarray(RNG.normal(size=m), jnp.float32)
     ref = rmw_serialized(table, idx, vals, "faa")
     for backend in ("sort", "onehot", "pallas"):
-        got = rmw_execute(table, idx, vals, "faa", backend=backend)
+        got = execute_backend(table, idx, vals, "faa", backend=backend)
         np.testing.assert_allclose(np.asarray(got.table),
                                    np.asarray(ref.table),
                                    rtol=1e-4, atol=1e-4, err_msg=backend)
@@ -238,24 +239,26 @@ def test_execute_validates():
     t = jnp.zeros((4,), jnp.int32)
     i = jnp.zeros((2,), jnp.int32)
     with pytest.raises(ValueError):
-        rmw_execute(t, i, i, "xor")
+        execute_backend(t, i, i, "xor")
     with pytest.raises(ValueError):
-        rmw_execute(t, i, i, "cas")
+        execute_backend(t, i, i, "cas")
     with pytest.raises(ValueError):
-        rmw_execute(t, i, i, "faa", backend="nope")
+        execute_backend(t, i, i, "faa", backend="nope")
     # per-op expected arrays on a uniform-only backend must be rejected,
     # not silently mis-executed
     with pytest.raises(ValueError):
-        rmw_execute(t, i, i, "cas", jnp.zeros((2,), jnp.int32),
+        execute_backend(t, i, i, "cas", jnp.zeros((2,), jnp.int32),
                     backend="onehot")
 
 
 def test_rmw_facade_auto_mode():
+    """The legacy facade still answers correctly — and warns (it is a shim)."""
     from repro.core.rmw import RmwConfig, rmw
     table = jnp.zeros((16,), jnp.int32)
     idx = jnp.asarray([1, 1, 2, 15, 1], jnp.int32)
     vals = jnp.asarray([1, 2, 3, 4, 5], jnp.int32)
     ref = rmw_serialized(table, idx, vals, "faa")
     for mode in ("auto", "onehot", "sort", "serialized"):
-        got = rmw(table, idx, vals, "faa", config=RmwConfig(mode=mode))
+        with pytest.warns(DeprecationWarning, match="repro.core.rmw_run"):
+            got = rmw(table, idx, vals, "faa", config=RmwConfig(mode=mode))
         _assert_same(ref, got, mode)

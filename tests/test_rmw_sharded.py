@@ -26,8 +26,8 @@ import json
 import jax, jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
+from repro import atomics
 from repro.core.rmw import rmw_serialized
-from repro.core.rmw_sharded import rmw_sharded
 from repro.core.bfs import bfs, bfs_sharded, kronecker_graph
 
 rng = np.random.default_rng(7)
@@ -63,11 +63,14 @@ def check(op, strategy, need_fetched, dist, axis, replica_axes=(),
     tab_spec = SPEC if not replica_axes else P("dev")
 
     def fn(t, i, v):
-        res = rmw_sharded(t, i[0], v[0], op,
-                          None if op != "cas" else jnp.int32(expected),
-                          axis=axis, replica_axes=replica_axes,
-                          strategy=strategy, need_fetched=need_fetched)
-        return res.table, res.fetched[None], res.success[None]
+        tbl = atomics.AtomicTable(t, axis=axis, replica_axes=replica_axes)
+        if op == "cas":
+            aop = atomics.Cas(i[0], v[0], expected=jnp.int32(expected))
+        else:
+            aop = atomics.OP_KINDS[op](i[0], v[0])
+        res = atomics.execute(tbl, aop, strategy=strategy,
+                              need_fetched=need_fetched)
+        return res.table.data, res.fetched[None], res.success[None]
 
     tabs, fetched, success = shard_map(
         fn, (tab_spec, SPEC, SPEC), (tab_spec, SPEC, SPEC))(
@@ -248,21 +251,26 @@ def test_default_spec_loads_calibration(tmp_path, monkeypatch):
         rmw_engine._reset_spec_cache()
 
 
-def test_core_rmw_namespace_is_module():
-    """`from repro.core import rmw` yields the module (collision fixed);
-    the renamed re-export and the deprecated callable-module alias work."""
+def test_core_rmw_namespace_contract():
+    """`from repro.core import rmw` yields the module (PR 2 fix; the old
+    callable-module alias is gone — calling it must TypeError now), while
+    `from repro.core import rmw_sharded` keeps yielding the PR 2 function
+    so legacy callers land on the DeprecationWarning shim, not a break."""
     import types
-    import warnings
     import jax.numpy as jnp
-    from repro.core import rmw, rmw_run
+    import pytest as _pytest
+    from repro.core import rmw, rmw_run, rmw_sharded
+    import sys
     assert isinstance(rmw, types.ModuleType)
+    assert type(rmw) is types.ModuleType          # not a callable subclass
+    # PR 2 surface preserved: the package attr is the shim function, and it
+    # is exactly the one the module defines (full path stays importable)
+    assert rmw_sharded is sys.modules["repro.core.rmw_sharded"].rmw_sharded
     assert rmw_run is rmw.rmw
     t = jnp.zeros((4,), jnp.int32)
     i = jnp.asarray([1, 1], jnp.int32)
     v = jnp.asarray([2, 3], jnp.int32)
-    assert int(rmw_run(t, i, v, "faa").table[1]) == 5
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        res = rmw(t, i, v, "faa")     # legacy function-style call
-        assert any(issubclass(x.category, DeprecationWarning) for x in w)
-    assert int(res.table[1]) == 5
+    with _pytest.warns(DeprecationWarning, match="repro.core.rmw_run"):
+        assert int(rmw_run(t, i, v, "faa").table[1]) == 5
+    with _pytest.raises(TypeError):
+        rmw(t, i, v, "faa")           # module is no longer callable
