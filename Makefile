@@ -3,7 +3,7 @@ PYTHON ?= python
 export PYTHONPATH := src:.:$(PYTHONPATH)
 
 .PHONY: test test-tier1 test-deprecations smoke bench-rmw \
-        bench-rmw-sharded bench-atomics calibrate
+        bench-rmw-sharded bench-atomics bench-reshard calibrate
 
 # Tier-1 gate + benchmark smoke (what CI runs).
 test: test-tier1 smoke
@@ -12,11 +12,11 @@ test-tier1:
 	$(PYTHON) -m pytest -x -q
 
 # Deprecation lane (CI): the RMW surface + examples under
-# -W error::DeprecationWarning — no internal caller may reach the legacy
-# shims (rmw_run / rmw_execute / rmw_sharded / old arrival_rank names).
-# pytest.ini already errors on repro-originated deprecations in every run;
-# this lane widens that to ALL DeprecationWarnings over the atomics-facing
-# tests and drives an example end to end under the same flag.
+# -W error::DeprecationWarning.  The PR-3 shims themselves are deleted
+# (tests/test_atomics.py pins their absence); this lane remains the
+# tripwire that keeps the surface shim-free — any future warn-and-forward
+# alias, ours or a dependency's, fails here first.  pytest.ini already
+# errors on repro-originated deprecations in every run.
 test-deprecations:
 	$(PYTHON) -m pytest -q -W error::DeprecationWarning \
 	  tests/test_atomics.py tests/test_rmw.py tests/test_rmw_engine.py \
@@ -24,11 +24,13 @@ test-deprecations:
 	$(PYTHON) -W error::DeprecationWarning examples/sharded_atomics.py \
 	  --n-per-device 512 --table 1024
 
-# Fast benchmark smoke: latency + bandwidth + the sharded-RMW exchange
-# (exercises the serialized oracle, the combining path, the Pallas kernel,
-# and the 8-fake-device distributed protocol end to end).
+# Fast benchmark smoke: latency + bandwidth + the sharded-RMW exchange +
+# the elastic-migration paths (exercises the serialized oracle, the
+# combining path, the Pallas kernel, the 8-fake-device distributed
+# protocol, and both reshard paths end to end).
 smoke:
-	$(PYTHON) benchmarks/run.py --fast --only latency,bandwidth,rmw_sharded
+	$(PYTHON) benchmarks/run.py --fast \
+	  --only latency,bandwidth,rmw_sharded,reshard
 
 # Full RMW backend shoot-out; rewrites benchmarks/results/rmw_backends.json.
 bench-rmw:
@@ -43,6 +45,11 @@ bench-rmw-sharded:
 # *_fast.json variants, never the committed full-grid tables.
 bench-atomics:
 	$(PYTHON) benchmarks/run.py --fast --only rmw_backends,rmw_sharded
+
+# Elastic-migration shoot-out (8 fake devices): reshard vs full replay,
+# in-collective exchange vs host roundtrip; rewrites results/reshard.json.
+bench-reshard:
+	$(PYTHON) benchmarks/run.py --only reshard
 
 # Fit + persist the container HardwareSpec (results/calibrated_spec.json).
 calibrate:

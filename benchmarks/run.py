@@ -17,6 +17,9 @@ Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.Csv).
                                                 hierarchical combining on an
                                                 8-fake-device mesh; emits
                                                 results/rmw_sharded.json)
+  reshard           Elastic-migration shoot-out (reshard vs full replay,
+                                                exchange vs host roundtrip;
+                                                emits results/reshard.json)
   calibrate         HardwareSpec persistence   (fits engine constants, writes
                                                 results/calibrated_spec.json)
 """
@@ -37,8 +40,8 @@ def main() -> None:
 
     from benchmarks import (bandwidth, bfs, calibrate, contention, latency,
                             model_validation, operand_size, operands_fetched,
-                            prefetcher, rmw_backends, rmw_sharded, roofline,
-                            unaligned)
+                            prefetcher, reshard, rmw_backends, rmw_sharded,
+                            roofline, unaligned)
     from benchmarks.common import Csv
 
     suite = {
@@ -52,6 +55,7 @@ def main() -> None:
         "bfs": lambda c: bfs.run(c, scale=10 if args.fast else 12),
         "rmw_backends": lambda c: rmw_backends.run(c, fast=args.fast),
         "rmw_sharded": lambda c: rmw_sharded.run(c, fast=args.fast),
+        "reshard": lambda c: reshard.run(c, fast=args.fast),
         "calibrate": lambda c: calibrate.run(c, fast=args.fast),
         "model_validation": model_validation.run,
         "roofline": roofline.run,

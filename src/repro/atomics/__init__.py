@@ -39,20 +39,31 @@ Every result is bit-identical to `core.rmw.rmw_serialized` applied to the
 same batch (on a mesh: to the device-rank-ordered concatenation of the
 per-device batches — the arrival-order contract of `core.rmw_sharded`).
 
-The legacy entry points (`core.rmw.rmw`/`rmw_run`,
-`core.rmw_engine.rmw_execute`, `core.rmw_sharded.rmw_sharded`,
-both old ``arrival_rank`` functions) are deprecation shims around this
-package and will be removed one release after migration.
+Tables survive mesh changes: `repro.atomics.layout.TableLayout` reifies the
+owner-major slot->shard contract (and the device-rank arrival order), and
+`repro.atomics.reshard` migrates a live table onto a new mesh by re-deriving
+that contract under the new extents — an in-collective ``all_to_all`` slot
+exchange when both meshes share the fleet, a host-roundtrip ``device_put``
+when they don't — with post-migration `execute` results bit-identical to a
+never-resharded run.  (The PR-3 legacy shims — ``rmw_run``,
+``rmw_execute``, ``rmw_sharded``, the old ``arrival_rank`` spellings —
+finished their deprecation window and are removed.)
 """
 
 from repro.atomics.ops import (  # noqa: F401
     OP_KINDS, AtomicOp, Cas, Faa, Max, Min, Swp)
 from repro.atomics.table import AtomicTable, make_table  # noqa: F401
+from repro.atomics.layout import TableLayout  # noqa: F401
 from repro.atomics.execute import (  # noqa: F401
     AtomicResult, arrival_rank, execute)
+from repro.atomics.reshard import (  # noqa: F401
+    ReshardPlan, cost_replay, migrate, plan_reshard, restore_table,
+    select_migration)
 
 __all__ = [
     "AtomicOp", "Faa", "Swp", "Min", "Max", "Cas", "OP_KINDS",
-    "AtomicTable", "make_table",
+    "AtomicTable", "make_table", "TableLayout",
     "AtomicResult", "execute", "arrival_rank",
+    "ReshardPlan", "plan_reshard", "migrate", "restore_table",
+    "select_migration", "cost_replay",
 ]

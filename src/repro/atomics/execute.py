@@ -35,7 +35,6 @@ from repro.atomics.ops import AtomicOp
 from repro.atomics.table import AtomicTable
 from repro.core import rmw as rmw_mod
 from repro.core import rmw_engine
-from repro.core.rmw_sharded import execute_sharded as _execute_sharded
 
 Array = jax.Array
 
@@ -76,7 +75,7 @@ def _axes_bound(names: Tuple[str, ...]) -> bool:
 
 def _execute_one(table: AtomicTable, op: AtomicOp, *, need_fetched: bool,
                  backend: str, strategy: str, spec,
-                 distinct_slots: Optional[int]):
+                 distinct_slots: Optional[int], reverse_ranks: bool):
     if not isinstance(op, AtomicOp):
         raise TypeError(
             f"ops must be atomics.Faa/Swp/Min/Max/Cas instances, "
@@ -88,12 +87,24 @@ def _execute_one(table: AtomicTable, op: AtomicOp, *, need_fetched: bool,
                 f"execute() was called outside shard_map — wrap the call in "
                 f"repro.sharding.shard_map_compat over those axes (the "
                 f"sharded tier uses collectives), or build a local table")
-        res = _execute_sharded(
+        # deferred: core.rmw_sharded imports repro.atomics.layout at module
+        # scope, so binding it here keeps the package import acyclic
+        from repro.core.rmw_sharded import execute_sharded
+        res = execute_sharded(
             table.data, op.indices, op.values, op.kind, op.expected,
             axis=table.axis, replica_axes=table.replica_axes,
             strategy=strategy, backend=backend, spec=spec,
-            need_fetched=need_fetched, distinct_slots=distinct_slots)
+            need_fetched=need_fetched, distinct_slots=distinct_slots,
+            reverse_ranks=reverse_ranks)
     else:
+        if reverse_ranks:
+            # on one device the caller owns the whole order: reversing is
+            # just op[::-1].  Accepting the flag here would imply a
+            # cross-device contract that does not exist on this tier.
+            raise ValueError(
+                "reverse_ranks reverses the device-rank arrival order of "
+                "the sharded tier; for a local table reverse the batch "
+                "itself (indices[::-1], values[::-1])")
         if strategy != "auto" or distinct_slots is not None:
             # exchange strategies/hints only exist on the sharded tier: a
             # caller naming one against a local table almost certainly
@@ -115,7 +126,8 @@ def execute(table: Union[AtomicTable, Array],
             ops: Union[AtomicOp, Sequence[AtomicOp]], *,
             need_fetched: bool = True, backend: str = "auto",
             strategy: str = "auto", spec=None,
-            distinct_slots: Optional[int] = None) -> AtomicResult:
+            distinct_slots: Optional[int] = None,
+            reverse_ranks: bool = False) -> AtomicResult:
     """Execute typed RMW op batches against a table, cost-model-routed.
 
     Args:
@@ -133,6 +145,10 @@ def execute(table: Union[AtomicTable, Array],
       spec: `perf_model.HardwareSpec` override for the cost models.
       distinct_slots: optional observed estimate of distinct slots touched
         per batch — the dynamic contention hint for `select_exchange`.
+      reverse_ranks: sharded tier only — serialize devices in *descending*
+        rank order (the arrival order reversed at every exchange level).
+        Combined with locally reversed batches this realizes a globally
+        reversed op stream, the second pass of the SWP+revert BFS scheme.
 
     Returns:
       :class:`AtomicResult`, bit-identical to the serialized oracle.
@@ -142,7 +158,8 @@ def execute(table: Union[AtomicTable, Array],
     if isinstance(ops, AtomicOp):
         table, fetched, success = _execute_one(
             table, ops, need_fetched=need_fetched, backend=backend,
-            strategy=strategy, spec=spec, distinct_slots=distinct_slots)
+            strategy=strategy, spec=spec, distinct_slots=distinct_slots,
+            reverse_ranks=reverse_ranks)
         return AtomicResult(table, fetched, success)
     ops = tuple(ops)
     if not ops:
@@ -151,7 +168,8 @@ def execute(table: Union[AtomicTable, Array],
     for op in ops:
         table, fetched, success = _execute_one(
             table, op, need_fetched=need_fetched, backend=backend,
-            strategy=strategy, spec=spec, distinct_slots=distinct_slots)
+            strategy=strategy, spec=spec, distinct_slots=distinct_slots,
+            reverse_ranks=reverse_ranks)
         fetched_l.append(fetched)
         success_l.append(success)
     return AtomicResult(table, tuple(fetched_l), tuple(success_l))
@@ -172,8 +190,9 @@ def arrival_rank(keys: Array, num_keys: Optional[int] = None, *,
     argsort + segmented-scan path (the only remaining use of that
     implementation — pass ``num_keys`` on hot paths).
 
-    Replaces both deprecated spellings: ``core.rmw.arrival_rank`` (argsort)
-    and ``core.rmw_engine.arrival_rank`` (sort-free, required num_keys).
+    The one spelling (the two legacy per-tier functions this replaced —
+    argsort in ``core.rmw``, sort-free in ``core.rmw_engine`` — are gone;
+    their implementations live on as the private functions dispatched here).
     """
     if num_keys is None:
         return rmw_mod._arrival_rank_argsort(keys)

@@ -4,7 +4,11 @@ An :class:`AtomicTable` bundles the table array with its *distribution
 contract*: which mesh axes shard it (owner-major: global slot ``g`` lives on
 shard ``g // m_local``) and which axes replicate it (every replica holds the
 same shard; writers on all replicas serialize replica-major).  ``axis=None``
-means a purely local table.
+means a purely local table.  The contract itself — owner arithmetic, replica
+semantics, device-rank arrival order — is reified by
+`repro.atomics.layout.TableLayout` (:meth:`AtomicTable.layout` derives it),
+which is what checkpoints persist and `repro.atomics.reshard` re-derives
+when the mesh changes.
 
 The handle is a registered pytree whose only leaf is ``data``, so it passes
 through ``jit`` / ``shard_map`` like a plain array while carrying the
@@ -87,6 +91,13 @@ class AtomicTable:
         new.axis = self.axis
         new.replica_axes = self.replica_axes
         return new
+
+    def layout(self, mesh=None):
+        """The table's :class:`~repro.atomics.layout.TableLayout` — the
+        owner-major contract with concrete extents (``mesh`` defaults to
+        the mesh of the array's sharding)."""
+        from repro.atomics.layout import TableLayout
+        return TableLayout.from_table(self, mesh=mesh)
 
     def __repr__(self):
         where = f"sharded over {self.axis!r}" if self.axis else "local"

@@ -1,12 +1,20 @@
 """Sharded checkpointing: atomic, async, keep-last-k, reshard-on-load.
 
 Format: one directory per step containing
-  manifest.json — pytree structure, shapes, dtypes, logical shardings
+  manifest.json — pytree structure, shapes, dtypes, logical shardings,
+                  plus per-leaf `AtomicTable` layout metadata
   arrays.npz    — flattened leaves (host-gathered)
 Writes go to `<dir>/tmp-<step>` then rename — a torn write can never be
 mistaken for a valid checkpoint (restart safety).  `restore(..., mesh=...)`
 re-device_puts every leaf under the *target* mesh's shardings, so elastic
 resizes (different data-axis extent) restore transparently.
+
+`repro.atomics.AtomicTable` handles are first-class: they checkpoint as
+their data plus the serialized `TableLayout` (`manifest["atomic_tables"]`),
+and restore through `repro.atomics.reshard.restore_table`, which re-derives
+the owner-major layout under the *active* mesh — the writer's extents are
+provenance, never trusted for placement, so a table written on mesh A
+restores bit-identical on mesh B (the elastic-resize contract).
 """
 
 from __future__ import annotations
@@ -21,21 +29,44 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.atomics.layout import norm_axes
+from repro.atomics.table import AtomicTable
+
 PyTree = Any
 
 
+def _is_table(x) -> bool:
+    return isinstance(x, AtomicTable)
+
+
+def _table_meta(t: AtomicTable) -> Dict:
+    """Serialized layout of a live table — full extents when the array's
+    sharding names a mesh, axis names alone otherwise."""
+    try:
+        return t.layout().to_dict()
+    except ValueError:                # sharded handle, mesh not derivable
+        return {"num_slots": int(t.data.shape[0]),
+                "dtype": str(t.data.dtype),
+                "axis": list(norm_axes(t.axis)),
+                "replica_axes": list(norm_axes(t.replica_axes)),
+                "mesh_axes": []}
+
+
 def _flatten(tree: PyTree) -> Tuple[List[np.ndarray], Any, List[str],
-                                    List[str]]:
-    leaves, treedef = jax.tree_util.tree_flatten(tree)
+                                    List[str], Dict[str, Dict]]:
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=_is_table)
     keys = [f"leaf_{i}" for i in range(len(leaves))]
-    out, dtypes = [], []
-    for x in leaves:
+    out, dtypes, tables = [], [], {}
+    for key, x in zip(keys, leaves):
+        if _is_table(x):
+            tables[key] = _table_meta(x)
+            x = x.data
         a = np.asarray(x)
         dtypes.append(str(a.dtype))   # logical dtype (pre-view)
         if a.dtype == jnp.bfloat16:
             a = a.view(np.uint16)     # npz cannot store bf16; view-roundtrip
         out.append(a)
-    return out, treedef, keys, dtypes
+    return out, treedef, keys, dtypes, tables
 
 
 def save(ckpt_dir: str, step: int, tree: PyTree,
@@ -47,7 +78,7 @@ def save(ckpt_dir: str, step: int, tree: PyTree,
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp)
-    leaves, treedef, keys, dtypes = _flatten(tree)
+    leaves, treedef, keys, dtypes, tables = _flatten(tree)
     np.savez(os.path.join(tmp, "arrays.npz"),
              **{k: v for k, v in zip(keys, leaves)})
     manifest = {
@@ -56,6 +87,7 @@ def save(ckpt_dir: str, step: int, tree: PyTree,
         "keys": keys,
         "shapes": [list(v.shape) for v in leaves],
         "dtypes": dtypes,
+        "atomic_tables": tables,
         "extra": extra or {},
     }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
@@ -128,20 +160,36 @@ def restore(ckpt_dir: str, step: int, like: PyTree,
     """Restore into the structure of `like`.  `sharding_fn(key, abstract)` may
     return a Sharding per leaf — this is the elastic reshard-on-load hook:
     leaves are device_put under the *current* mesh regardless of how many
-    hosts/chips wrote the checkpoint."""
+    hosts/chips wrote the checkpoint.  `AtomicTable` leaves in `like` bypass
+    `sharding_fn` (it is never called for them): they restore through
+    `reshard.restore_table`, which re-derives the owner-major layout from
+    the handle's contract under the active mesh."""
     path = os.path.join(ckpt_dir, f"step-{step:08d}")
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     data = np.load(os.path.join(path, "arrays.npz"))
-    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    leaves_like, treedef = jax.tree_util.tree_flatten(like, is_leaf=_is_table)
     assert len(leaves_like) == len(manifest["keys"]), \
         "checkpoint structure mismatch"
+    table_meta = manifest.get("atomic_tables", {})
     new_leaves = []
     for i, (key, ref) in enumerate(zip(manifest["keys"], leaves_like)):
         arr = data[key]
         if manifest["dtypes"][i] == "bfloat16" and arr.dtype == np.uint16:
             import ml_dtypes
             arr = arr.view(ml_dtypes.bfloat16)
+        if _is_table(ref):
+            # table handles bypass sharding_fn entirely (placement comes
+            # from the handle's own contract).  A leaf the WRITER stored as
+            # a table but the caller's `like` holds as a plain array stays
+            # on the plain path below — the caller asked for an array, and
+            # skipping sharding_fn only for `like`-tables keeps the
+            # positional iterator callers like elastic.reshard_restore
+            # build aligned.
+            from repro.atomics.reshard import restore_table
+            new_leaves.append(restore_table(arr, like=ref,
+                                            meta=table_meta.get(key)))
+            continue
         if sharding_fn is not None:
             sh = sharding_fn(key, ref)
             if sh is not None:

@@ -15,9 +15,10 @@ Layers (DESIGN.md §2-3):
 
 The one public way to *issue* RMW batches is the typed front-end
 `repro.atomics` (`execute`, `Faa`/`Swp`/`Min`/`Max`/`Cas`, `AtomicTable`,
-`arrival_rank`).  The old per-tier entry points re-exported here —
-``rmw_run``, ``rmw_execute``, ``rmw_sharded``, both ``arrival_rank``
-spellings — are deprecation shims that warn and forward; the raw-array
+`arrival_rank`).  The PR-3 deprecation shims (``rmw_run``, ``rmw_execute``,
+``rmw_sharded``, both old ``arrival_rank`` spellings) completed their
+one-release window and were deleted; ``repro.core.rmw`` and
+``repro.core.rmw_sharded`` are now plainly the modules, and the raw-array
 internal entries are ``rmw_engine.execute_backend`` and
 ``rmw_sharded.execute_sharded``.
 """
@@ -28,28 +29,12 @@ from repro.core.perf_model import (  # noqa: F401
     ilp_gap, latency, read_for_ownership, read_latency, relaxed_bandwidth,
     spec_from_dict, spec_to_dict, unaligned_latency)
 from repro.core.rmw import (  # noqa: F401
-    OPS, RmwConfig, RmwResult, arrival_rank, rmw_combining, rmw_serialized,
-    scatter_add_grads, segmented_scan)
-from repro.core.rmw import rmw as rmw_run  # noqa: F401  (deprecated shim)
+    OPS, RmwResult, rmw_combining, rmw_serialized, scatter_add_grads,
+    segmented_scan)
 from repro.core.rmw_engine import (  # noqa: F401
     BACKENDS, RmwBackend, calibrated_spec_path, default_spec,
-    execute_backend, register_backend, rmw_execute, rmw_onehot,
-    select_backend)
+    execute_backend, register_backend, rmw_onehot, select_backend)
 from repro.core.rmw_sharded import (  # noqa: F401
     EXCHANGE_COSTS, STRATEGIES, MeshAxis, cost_exchange_hierarchical,
-    cost_exchange_oneshot, execute_sharded, rmw_sharded, select_exchange)
+    cost_exchange_oneshot, execute_sharded, select_exchange)
 from repro.core.validation import NRMSE_GATE, ValidationRow, nrmse, validate  # noqa: F401
-
-# Namespace contract during the deprecation window:
-#   * `repro.core.rmw` is the MODULE (PR 2's collision fix — the facade
-#     function is re-exported as `rmw_run`, now a warning shim);
-#   * `repro.core.rmw_sharded` stays the deprecated FUNCTION, exactly what
-#     PR 2 shipped, so existing `from repro.core import rmw_sharded`
-#     callers get the one-release DeprecationWarning instead of a
-#     "'module' object is not callable" hard break.  The module is always
-#     reachable by its full path (`from repro.core.rmw_sharded import ...`).
-# Both disappear with the shims one release after PR 3.
-import sys as _sys  # noqa: E402
-
-rmw = _sys.modules["repro.core.rmw"]
-del _sys

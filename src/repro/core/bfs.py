@@ -127,19 +127,34 @@ def bfs(src: np.ndarray, dst: np.ndarray, n: int, root: int = 0,
 
 def bfs_sharded(src: np.ndarray, dst: np.ndarray, n: int, root: int = 0,
                 *, axis: str = "dev", mesh=None, strategy: str = "auto",
-                max_levels: int = 64) -> BfsResult:
+                op: str = "cas", max_levels: int = 64) -> BfsResult:
     """Level-synchronous BFS with the **frontier table sharded over a mesh**.
 
     The parent array — the paper's contended cache line — is sharded over
     `axis` (vertex ``v`` owned by shard ``v // n_local``); edges are split
     over the same devices.  Each level gathers the frontier bitmap and issues
-    every frontier edge's ``Cas(dst, src, expected=-1)`` through the sharded
-    tier of `repro.atomics.execute`: per-device pre-combine (one CAS per
-    distinct destination survives), owner-shard resolve, table-only fast
-    path.  Parent selection is identical to the single-device `bfs` because
-    the arrival-order contract serializes edges in (device-rank, local)
-    order — exactly the concatenated edge order of the unsharded run.
+    every frontier edge's parent update through the sharded tier of
+    `repro.atomics.execute`.  Parent selection is identical to the
+    single-device `bfs` because the arrival-order contract serializes edges
+    in (device-rank, local) order — exactly the concatenated edge order of
+    the unsharded run.
+
+    ``op`` picks the combiner protocol, mirroring `bfs`:
+
+    ``"cas"``  set-if-unvisited (`Cas(dst, src, expected=-1)`): per-device
+               pre-combine (one CAS per distinct destination survives),
+               owner-shard resolve, table-only fast path.
+    ``"swp"``  swap + revert: pass 1 swaps unconditionally and fetches the
+               overwritten parents; pass 2 restores already-visited nodes
+               by replaying the revert stream **globally reversed** —
+               locally reversed batches under ``reverse_ranks=True``
+               (descending device rank), so last-wins of the reversed
+               stream equals first-wins of the forward stream, exactly
+               the single-device scheme.
     """
+    if op not in ("cas", "swp"):
+        raise ValueError(f"bfs_sharded supports op 'cas' or 'swp', "
+                         f"got {op!r}")
     if mesh is None:
         mesh = jax.make_mesh((jax.device_count(),), (axis,))
     ndev = int(mesh.shape[axis])
@@ -159,11 +174,22 @@ def bfs_sharded(src: np.ndarray, dst: np.ndarray, n: int, root: int = 0,
             fg = jax.lax.all_gather(frontier, axis, tiled=True)  # (n_pad,)
             active = fg[jnp.clip(s, 0, n_pad - 1)] & (s < n_pad)
             cand = jnp.where(active, d, n_pad)                   # OOR drops
-            res = atomics.execute(
-                atomics.AtomicTable(parent, axis=axis),
-                atomics.Cas(cand, s, expected=jnp.int32(-1)),
-                strategy=strategy, need_fetched=False)
-            new_parent = res.table.data
+            tbl = atomics.AtomicTable(parent, axis=axis)
+            if op == "cas":
+                res = atomics.execute(
+                    tbl, atomics.Cas(cand, s, expected=jnp.int32(-1)),
+                    strategy=strategy, need_fetched=False)
+                new_parent = res.table.data
+            else:  # swp + revert (see docstring)
+                res = atomics.execute(tbl, atomics.Swp(cand, s),
+                                      strategy=strategy)
+                visited_before = res.fetched != -1
+                revert_idx = jnp.where(visited_before, cand, n_pad)
+                new_parent = atomics.execute(
+                    res.table,
+                    atomics.Swp(revert_idx[::-1], res.fetched[::-1]),
+                    strategy=strategy, need_fetched=False,
+                    reverse_ranks=True).table.data
             newf = (new_parent != -1) & (parent == -1)
             edges = edges + jax.lax.psum(jnp.sum(active), axis)
             more = jax.lax.psum(jnp.sum(newf), axis) > 0

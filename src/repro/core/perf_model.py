@@ -75,6 +75,14 @@ class HardwareSpec:
     # what makes hierarchical (3 collectives) lose to one-shot (2) on
     # uncontended batches.
     collective_launch_s: float = 0.0
+    # --- migration terms (repro.atomics.reshard: elastic table moves) ---
+    # Effective device<->host bandwidth of a full-table gather/scatter (the
+    # host-roundtrip migration path); 0 -> tier_bandwidth_Bps[HOST].
+    host_roundtrip_Bps: float = 0.0
+    # Dispatch cost of one host->devices placement (device_put of a sharded
+    # table) — the latency floor of the host-roundtrip path, what the
+    # in-collective exchange path avoids.
+    device_put_launch_s: float = 0.0
 
     def with_residuals(self, residual: Mapping[Tuple[str, Tier], float]) -> "HardwareSpec":
         return replace(self, residual_s=dict(residual))
@@ -121,6 +129,8 @@ TPU_V5E = HardwareSpec(
     loop_step_s=2e-6,
     dcn_link_Bps=25e9,
     collective_launch_s=1e-6,
+    host_roundtrip_Bps=16e9,           # PCIe-bound full-table roundtrip
+    device_put_launch_s=5e-6,
 )
 
 
@@ -163,6 +173,10 @@ def cpu_default_spec() -> HardwareSpec:
         # fake-device "pods" on one host still pay XLA's collective dispatch
         dcn_link_Bps=1e9,
         collective_launch_s=2e-5,
+        # host "roundtrip" on CPU devices is a memcpy, but each sharded
+        # device_put pays Python/XLA placement dispatch per buffer
+        host_roundtrip_Bps=1e10,
+        device_put_launch_s=2e-4,
     )
 
 

@@ -21,12 +21,14 @@ Shared helpers (`segmented_scan`, the argsort arrival rank behind
 This module holds the *sort* (argsort + segmented scan) implementation and
 the serialized oracle — implementation building blocks for the engine
 (`core.rmw_engine`) and the unified front-end (`repro.atomics`, the one
-public entry).  The old `rmw()` facade below is a deprecation shim.
+public entry).  The PR-3 deprecation shims (the ``rmw()`` facade and the
+argsort ``arrival_rank`` spelling) completed their one-release window and
+are gone; `repro.atomics.execute` / `repro.atomics.arrival_rank` are the
+public spellings.
 """
 
 from __future__ import annotations
 
-import dataclasses
 from functools import partial
 from typing import Callable, NamedTuple, Optional, Tuple
 
@@ -94,17 +96,6 @@ def _arrival_rank_argsort(keys: Array) -> Array:
     ones = jnp.ones_like(keys, dtype=jnp.int32)
     incl = segmented_scan(ones, seg_start, jnp.add)
     return (incl - 1)[inv]
-
-
-def arrival_rank(keys: Array, num_keys: Optional[int] = None) -> Array:
-    """Deprecated spelling — use `repro.atomics.arrival_rank`."""
-    import warnings
-    warnings.warn(
-        "repro.core.rmw.arrival_rank is deprecated; use "
-        "repro.atomics.arrival_rank (pass num_keys for the sort-free path)",
-        DeprecationWarning, stacklevel=2)
-    del num_keys
-    return _arrival_rank_argsort(keys)
 
 
 # ---------------------------------------------------------------------------
@@ -240,44 +231,6 @@ def _cas_uniform(table: Array, indices: Array, values: Array,
     padded = jnp.concatenate([table, table[:1]], axis=0)
     new_table = padded.at[write_idx].set(val_s)[:-1]
     return RmwResult(new_table, fetched_s[inv], success_s[inv])
-
-
-# ---------------------------------------------------------------------------
-# Public facade
-# ---------------------------------------------------------------------------
-
-#: modes accepted by :class:`RmwConfig`.  "combining"/"sort" is the argsort
-#: path in this module; "serialized" the oracle; the rest dispatch to the
-#: engine registry in `core.rmw_engine` ("auto" = cost-model selection).
-RMW_MODES = ("combining", "serialized", "auto", "sort", "onehot", "pallas")
-
-
-@dataclasses.dataclass(frozen=True)
-class RmwConfig:
-    mode: str = "combining"   # see RMW_MODES
-
-    def __post_init__(self):
-        if self.mode not in RMW_MODES:
-            raise ValueError(self.mode)
-
-
-def rmw(table: Array, indices: Array, values: Array, op: str,
-        expected: Optional[Array] = None,
-        config: RmwConfig = RmwConfig()) -> RmwResult:
-    """Deprecated facade (also re-exported as ``repro.core.rmw_run``) — use
-    `repro.atomics.execute` with typed ops; ``config.mode`` maps to its
-    ``backend=`` keyword ("combining" -> "sort", "serialized" stays)."""
-    import warnings
-    warnings.warn(
-        "repro.core.rmw_run / repro.core.rmw.rmw is deprecated; use "
-        "repro.atomics.execute", DeprecationWarning, stacklevel=2)
-    if config.mode == "combining":
-        return rmw_combining(table, indices, values, op, expected)
-    if config.mode == "serialized":
-        return rmw_serialized(table, indices, values, op, expected)
-    from repro.core import rmw_engine  # deferred: engine imports this module
-    return rmw_engine.execute_backend(table, indices, values, op, expected,
-                                      backend=config.mode)
 
 
 def scatter_add_grads(grad_table: Array, token_ids: Array,

@@ -36,16 +36,16 @@ runtime decision procedure: each backend exposes a predicted cost built from
 :class:`repro.core.perf_model.HardwareSpec` constants (op, batch size, table
 size -> seconds), and the cheapest *correct* backend wins.  ``execute_backend``
 is the canonical entry, reached through the unified front-end
-`repro.atomics.execute` (the old ``rmw_execute`` / ``arrival_rank`` names are
-deprecation shims).  The constants were tuned from the committed
-``benchmarks/results/rmw_backends.json`` sweep (see README "RMW engine").
+`repro.atomics.execute` (the PR-3 ``rmw_execute`` / ``arrival_rank`` shims
+served their one-release window and are deleted).  The constants were tuned
+from the committed ``benchmarks/results/rmw_backends.json`` sweep (see
+README "RMW engine").
 """
 
 from __future__ import annotations
 
 import dataclasses
 import math
-import warnings
 from functools import partial
 from typing import Callable, Dict, Optional
 
@@ -218,7 +218,7 @@ def _arrival_rank_sortfree(keys: Array, num_keys: int, *,
     (one associative scan, MXU/VPU friendly) wins; for large ones the blocked
     one-hot backend computes the same thing without materializing (n, K).
     Public spelling: `repro.atomics.arrival_rank` (this module's old
-    `arrival_rank` name is a deprecation shim around this function).
+    `arrival_rank` shim around this function is deleted).
     """
     n = keys.shape[0]
     k = jnp.asarray(keys, jnp.int32)
@@ -229,16 +229,6 @@ def _arrival_rank_sortfree(keys: Array, num_keys: int, *,
     res = rmw_onehot(jnp.zeros((num_keys,), jnp.int32), k,
                      jnp.ones((n,), jnp.int32), "faa", block=block)
     return res.fetched
-
-
-def arrival_rank(keys: Array, num_keys: int, *,
-                 block: int = DEFAULT_ONEHOT_BLOCK) -> Array:
-    """Deprecated spelling of the sort-free rank — use
-    `repro.atomics.arrival_rank` (same signature, ``num_keys`` optional)."""
-    warnings.warn(
-        "repro.core.rmw_engine.arrival_rank is deprecated; use "
-        "repro.atomics.arrival_rank", DeprecationWarning, stacklevel=2)
-    return _arrival_rank_sortfree(keys, num_keys, block=block)
 
 
 # ---------------------------------------------------------------------------
@@ -483,18 +473,3 @@ def execute_backend(table: Array, indices: Array, values: Array, op: str,
             f"`expected`; per-op expected arrays need the serialized oracle")
     return b.run(table, indices, values, op, expected,
                  need_fetched=need_fetched)
-
-
-def rmw_execute(table: Array, indices: Array, values: Array, op: str,
-                expected: Optional[Array] = None, *, backend: str = "auto",
-                spec: Optional[perf_model.HardwareSpec] = None,
-                need_fetched: bool = True) -> RmwResult:
-    """Deprecated spelling of `execute_backend` — use
-    `repro.atomics.execute` (typed ops, tier auto-detection)."""
-    warnings.warn(
-        "repro.core.rmw_engine.rmw_execute is deprecated; use "
-        "repro.atomics.execute (or execute_backend for the raw-array "
-        "engine entry)", DeprecationWarning, stacklevel=2)
-    return execute_backend(table, indices, values, op, expected,
-                           backend=backend, spec=spec,
-                           need_fetched=need_fetched)

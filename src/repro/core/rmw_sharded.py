@@ -35,7 +35,11 @@ Protocol (one exchange level)::
 concatenation of per-device batches ordered by device rank — lexicographic
 over ``replica_axes + axis`` (major to minor), each device's ops in local
 order.  Every strategy below realizes the *same* order, so they are
-interchangeable bit-for-bit.
+interchangeable bit-for-bit.  The contract (and the owner-major slot->shard
+arithmetic realizing it) is reified by `repro.atomics.layout.TableLayout`;
+``reverse_ranks=True`` flips it to *descending* device rank — with locally
+reversed batches that is a globally reversed op stream, which is what the
+SWP+revert BFS scheme needs for its second pass.
 
 Strategies (`strategy=`):
 
@@ -78,6 +82,7 @@ from typing import NamedTuple, Optional, Sequence, Tuple, Union
 import jax
 import jax.numpy as jnp
 
+from repro.atomics.layout import local_row, owner_shard
 from repro.core import collective_model, perf_model, rmw_engine
 from repro.core.collective_model import MeshAxis
 from repro.core.placement import Tier
@@ -166,6 +171,14 @@ class _Stage(NamedTuple):
     comb: _Combined
     slotpos: Array      # per-op packed buffer position (scratch if not rep)
     m_global: int
+    reverse: bool = False
+
+
+def _flip_lanes(x: Array, n_dest: int, cap: int) -> Array:
+    """Reverse the per-source blocks of a routed flat buffer: the receiver
+    processes sources in *descending* rank — the reversed arrival order.
+    Involutive, so the return path applies the same flip to undo it."""
+    return x.reshape(n_dest, cap)[::-1].reshape(-1)
 
 
 def _rank_slotpos(dest: Array, valid: Array, n_dest: int, cap: int) -> Array:
@@ -213,11 +226,12 @@ def _route_pair(send_idx: Array, send_val: Array, axis: AxisNames,
 
 def _push(gidx: Array, vals: Array, op: str, expected, *, axis: AxisNames,
           n_dest: int, dest: Array, cap: int, m_global: int,
-          need_fetched: bool, backend: str, spec
+          need_fetched: bool, backend: str, spec, reverse: bool = False
           ) -> Tuple[_Stage, Array, Array]:
     """Pre-combine + route one level.  `dest` gives, per op, the destination
     rank on `axis` (same for every op of a group).  Returns the stage record
-    and the received flat batch (source-rank-major — the arrival order)."""
+    and the received flat batch (source-rank-major — the arrival order;
+    descending source rank when ``reverse``)."""
     st = _combine(gidx, vals, op, expected, need_fetched=need_fetched,
                   backend=backend, spec=spec)
     dest_s = dest[st.order]
@@ -230,8 +244,11 @@ def _push(gidx: Array, vals: Array, op: str, expected, *, axis: AxisNames,
     send_val = _scatter_padded(0, vals.dtype, slotpos,
                                st.combined[st.seg_id], scratch)
     recv_idx, recv_val = _route_pair(send_idx, send_val, axis, n_dest, cap)
+    if reverse:
+        recv_idx = _flip_lanes(recv_idx, n_dest, cap)
+        recv_val = _flip_lanes(recv_val, n_dest, cap)
     stage = _Stage(axis=axis, n_dest=n_dest, cap=cap, comb=st,
-                   slotpos=slotpos, m_global=m_global)
+                   slotpos=slotpos, m_global=m_global, reverse=reverse)
     return stage, recv_idx, recv_val
 
 
@@ -241,6 +258,8 @@ def _pop(stage: _Stage, bases_recv: Array, op: str, expected
     reconstruct exact per-op fetched/success from (base, local chain)."""
     st = stage.comb
     n = st.sidx.shape[0]
+    if stage.reverse:       # undo the receive-side flip before routing back
+        bases_recv = _flip_lanes(bases_recv, stage.n_dest, stage.cap)
     ret = jax.lax.all_to_all(bases_recv.reshape(stage.n_dest, stage.cap),
                              stage.axis, split_axis=0,
                              concat_axis=0).reshape(-1)
@@ -281,12 +300,12 @@ def execute_sharded(table: Array, indices: Array, values: Array, op: str,
                     spec: Optional[perf_model.HardwareSpec] = None,
                     axis_tiers: Optional[Sequence[Tier]] = None,
                     need_fetched: bool = True,
-                    distinct_slots: Optional[int] = None) -> RmwResult:
+                    distinct_slots: Optional[int] = None,
+                    reverse_ranks: bool = False) -> RmwResult:
     """Execute an RMW batch against a mesh-sharded table (inside shard_map).
 
     The distributed tier of the unified front-end — call it through
-    `repro.atomics.execute`; this raw-array spelling is the internal entry
-    (the old ``rmw_sharded`` name is a deprecation shim).
+    `repro.atomics.execute`; this raw-array spelling is the internal entry.
 
     `table` is this device's shard (global slot ``g`` owned by shard
     ``g // m_local``, shards laid out major-to-minor over the ``axis``
@@ -307,6 +326,12 @@ def execute_sharded(table: Array, indices: Array, values: Array, op: str,
     (e.g. the previous step's counts) to `select_exchange`, sharpening the
     one-shot-vs-hierarchical crossover for skewed batches; it never changes
     results, only the ``strategy="auto"`` choice.
+
+    ``reverse_ranks`` flips the arrival-order contract to *descending*
+    device rank (every exchange level processes sources in reverse): results
+    then equal `rmw_serialized` on the batches concatenated in reverse
+    device order.  Callers wanting a fully reversed global stream also
+    reverse their local batch — see ``bfs_sharded(op="swp")``.
 
     Returns the PR-1 :class:`RmwResult` contract: results bit-identical to
     `rmw_serialized` on the device-rank-ordered concatenated batch (see
@@ -341,7 +366,8 @@ def execute_sharded(table: Array, indices: Array, values: Array, op: str,
         return _execute_cas_perop(
             table, indices, values, expected, shard_axes=shard_axes,
             rep_axes=rep_axes, n_shards=n_shards, n_rep=n_rep, m_loc=m_loc,
-            m_global=m_global, need_fetched=need_fetched, spec=spec)
+            m_global=m_global, need_fetched=need_fetched, spec=spec,
+            reverse=reverse_ranks)
 
     if strategy == "auto":
         strategy = select_exchange(
@@ -353,6 +379,8 @@ def execute_sharded(table: Array, indices: Array, values: Array, op: str,
         strategy = "oneshot"
     if strategy == "dense" and not (op == "faa" and not need_fetched):
         raise ValueError("strategy='dense' is the pure-FAA table-only path")
+    # dense is pure commutative FAA — every arrival order yields the same
+    # table, so reverse_ranks is trivially satisfied there.
 
     gidx = indices.astype(jnp.int32)
     gidx = jnp.where((gidx < 0) | (gidx >= m_global), m_global, gidx)
@@ -379,32 +407,36 @@ def execute_sharded(table: Array, indices: Array, values: Array, op: str,
         cur_idx, cur_vals, stages = _push_naive(
             gidx, vals=values, op=op, expected=expected,
             axis=shard_axes, n_shards=n_shards, m_loc=m_loc,
-            m_global=m_global, need_fetched=need_fetched)
+            m_global=m_global, need_fetched=need_fetched,
+            reverse=reverse_ranks)
     elif strategy == "oneshot" or len(shard_axes) == 1:
-        dest = jnp.minimum(cur_idx // m_loc, n_shards - 1)
+        dest = owner_shard(cur_idx, m_loc, n_shards)
         cap = min(n, m_loc)
         stage, cur_idx, cur_vals = _push(
             cur_idx, cur_vals, op, expected, axis=shard_axes,
             n_dest=n_shards, dest=dest, cap=cap, m_global=m_global,
-            need_fetched=need_fetched, backend=backend, spec=spec)
+            need_fetched=need_fetched, backend=backend, spec=spec,
+            reverse=reverse_ranks)
         stages.append(stage)
     else:  # hierarchical: inner axes to the deputy, outer axis to the owner
         inner = shard_axes[1:]
         n_inner = math.prod(sizes[1:])
         n_outer = sizes[0]
-        dest1 = jnp.minimum(cur_idx // m_loc, n_shards - 1) % n_inner
+        dest1 = owner_shard(cur_idx, m_loc, n_shards) % n_inner
         cap1 = min(n, m_loc * n_outer)
         stage, cur_idx, cur_vals = _push(
             cur_idx, cur_vals, op, expected, axis=inner, n_dest=n_inner,
             dest=dest1, cap=cap1, m_global=m_global,
-            need_fetched=need_fetched, backend=backend, spec=spec)
+            need_fetched=need_fetched, backend=backend, spec=spec,
+            reverse=reverse_ranks)
         stages.append(stage)
-        dest2 = jnp.minimum(cur_idx // (m_loc * n_inner), n_outer - 1)
+        dest2 = owner_shard(cur_idx, m_loc * n_inner, n_outer)
         cap2 = min(n_inner * cap1, m_loc)
         stage, cur_idx, cur_vals = _push(
             cur_idx, cur_vals, op, expected, axis=shard_axes[0],
             n_dest=n_outer, dest=dest2, cap=cap2, m_global=m_global,
-            need_fetched=need_fetched, backend=backend, spec=spec)
+            need_fetched=need_fetched, backend=backend, spec=spec,
+            reverse=reverse_ranks)
         stages.append(stage)
 
     if rep_axes:  # serialize replica groups at replica rank 0
@@ -413,12 +445,13 @@ def execute_sharded(table: Array, indices: Array, values: Array, op: str,
         stage, cur_idx, cur_vals = _push(
             cur_idx, cur_vals, op, expected, axis=rep_axes, n_dest=n_rep,
             dest=dest_r, cap=cap_r, m_global=m_global,
-            need_fetched=need_fetched, backend=backend, spec=spec)
+            need_fetched=need_fetched, backend=backend, spec=spec,
+            reverse=reverse_ranks)
         stages.append(stage)
 
     # --- resolve at the owner ---------------------------------------------
     shard = jax.lax.axis_index(shard_axes)
-    row = jnp.where(cur_idx < m_global, cur_idx - shard * m_loc, m_loc)
+    row = local_row(cur_idx, shard, m_loc, m_global)
     res = rmw_engine.execute_backend(
         table, row, cur_vals, op,
         None if op != "cas" else jnp.asarray(expected, table.dtype),
@@ -439,7 +472,7 @@ def execute_sharded(table: Array, indices: Array, values: Array, op: str,
 
 
 def _push_naive(gidx, vals, op, expected, axis, n_shards, m_loc, m_global,
-                need_fetched):
+                need_fetched, reverse=False):
     """The no-combining baseline: each op is its own routed group.
 
     Packing is by per-destination arrival rank over *all* ops (cap = n), so
@@ -448,7 +481,7 @@ def _push_naive(gidx, vals, op, expected, axis, n_shards, m_loc, m_global,
     transfer per op), which the benchmark uses as the contention baseline.
     """
     n = gidx.shape[0]
-    dest = jnp.minimum(gidx // m_loc, n_shards - 1)
+    dest = owner_shard(gidx, m_loc, n_shards)
     valid = gidx < m_global
     cap = n
     scratch = n_shards * cap
@@ -456,6 +489,9 @@ def _push_naive(gidx, vals, op, expected, axis, n_shards, m_loc, m_global,
     send_idx = _scatter_padded(m_global, jnp.int32, slotpos, gidx, scratch)
     send_val = _scatter_padded(0, vals.dtype, slotpos, vals, scratch)
     recv_idx, recv_val = _route_pair(send_idx, send_val, axis, n_shards, cap)
+    if reverse:
+        recv_idx = _flip_lanes(recv_idx, n_shards, cap)
+        recv_val = _flip_lanes(recv_val, n_shards, cap)
     comb = _Combined(order=jnp.arange(n), inv=jnp.arange(n), sidx=gidx,
                      sval=vals, seg_start=jnp.ones((n,), bool),
                      seg_id=jnp.arange(n, dtype=jnp.int32),
@@ -464,7 +500,7 @@ def _push_naive(gidx, vals, op, expected, axis, n_shards, m_loc, m_global,
                          op, vals.dtype, expected), vals.dtype),
                      loc_success=jnp.ones((n,), bool))
     stage = _Stage(axis=axis, n_dest=n_shards, cap=cap, comb=comb,
-                   slotpos=slotpos, m_global=m_global)
+                   slotpos=slotpos, m_global=m_global, reverse=reverse)
     return recv_idx, recv_val, [stage]
 
 
@@ -497,7 +533,7 @@ def _route_cols(cols, axis: AxisNames, n_dest: int, cap: int):
 
 def _push_uncombined(gidx: Array, vals: Array, exps: Array, *,
                      axis: AxisNames, n_dest: int, dest: Array,
-                     m_global: int):
+                     m_global: int, reverse: bool = False):
     """Route (slot id, value, expected) rows with NO pre-combining.
 
     Like `_push_naive`, packing is by per-destination arrival rank over all
@@ -515,6 +551,10 @@ def _push_uncombined(gidx: Array, vals: Array, exps: Array, *,
     send_exp = _scatter_padded(0, exps.dtype, slotpos, exps, scratch)
     recv_idx, recv_val, recv_exp = _route_cols(
         (send_idx, send_val, send_exp), axis, n_dest, cap)
+    if reverse:
+        recv_idx, recv_val, recv_exp = (
+            _flip_lanes(c, n_dest, cap)
+            for c in (recv_idx, recv_val, recv_exp))
     return slotpos, recv_idx, recv_val, recv_exp
 
 
@@ -522,7 +562,7 @@ def _execute_cas_perop(table: Array, indices: Array, values: Array,
                        expected: Array, *, shard_axes: Tuple[str, ...],
                        rep_axes: Tuple[str, ...], n_shards: int, n_rep: int,
                        m_loc: int, m_global: int, need_fetched: bool,
-                       spec) -> RmwResult:
+                       spec, reverse: bool = False) -> RmwResult:
     """Cross-shard CAS with per-op expected values (ROADMAP closure).
 
     Per-op expected CAS chains do not compose associatively (the combined
@@ -543,21 +583,21 @@ def _execute_cas_perop(table: Array, indices: Array, values: Array,
 
     stages = []                     # (axis, n_dest, cap, slotpos)
     cur_idx, cur_val, cur_exp = gidx, values, exp
-    dest = jnp.minimum(cur_idx // m_loc, n_shards - 1)
+    dest = owner_shard(cur_idx, m_loc, n_shards)
     slotpos, cur_idx, cur_val, cur_exp = _push_uncombined(
         cur_idx, cur_val, cur_exp, axis=shard_axes, n_dest=n_shards,
-        dest=dest, m_global=m_global)
+        dest=dest, m_global=m_global, reverse=reverse)
     stages.append((shard_axes, n_shards, n, slotpos))
     if rep_axes:                    # serialize replica groups at rank 0
         n2 = int(cur_idx.shape[0])
         dest_r = jnp.zeros((n2,), jnp.int32)
         slotpos, cur_idx, cur_val, cur_exp = _push_uncombined(
             cur_idx, cur_val, cur_exp, axis=rep_axes, n_dest=n_rep,
-            dest=dest_r, m_global=m_global)
+            dest=dest_r, m_global=m_global, reverse=reverse)
         stages.append((rep_axes, n_rep, n2, slotpos))
 
     shard = jax.lax.axis_index(shard_axes)
-    row = jnp.where(cur_idx < m_global, cur_idx - shard * m_loc, m_loc)
+    row = local_row(cur_idx, shard, m_loc, m_global)
     res = rmw_engine.execute_backend(table, row, cur_val, "cas", cur_exp,
                                      backend="serialized", spec=spec,
                                      need_fetched=need_fetched)
@@ -572,6 +612,8 @@ def _execute_cas_perop(table: Array, indices: Array, values: Array,
 
     bases = res.fetched.astype(values.dtype)
     for axis, n_dest, cap, slotpos in reversed(stages):
+        if reverse:                 # undo the receive-side flip per level
+            bases = _flip_lanes(bases, n_dest, cap)
         ret = _route_flat(bases, axis, n_dest, cap)
         ret = jnp.concatenate([ret, jnp.zeros((1,), ret.dtype)])
         bases = ret[slotpos]        # scratch -> 0
@@ -579,26 +621,6 @@ def _execute_cas_perop(table: Array, indices: Array, values: Array,
     fetched = jnp.where(valid, bases, zero_f)
     success = valid & (bases == exp.astype(values.dtype))
     return RmwResult(new_table, fetched, success)
-
-
-def rmw_sharded(table: Array, indices: Array, values: Array, op: str,
-                expected: Optional[Array] = None, *, axis: AxisNames,
-                replica_axes: AxisNames = (), strategy: str = "auto",
-                backend: str = "auto",
-                spec: Optional[perf_model.HardwareSpec] = None,
-                axis_tiers: Optional[Sequence[Tier]] = None,
-                need_fetched: bool = True) -> RmwResult:
-    """Deprecated spelling of `execute_sharded` — use
-    `repro.atomics.execute` (typed ops, shard_map auto-detection)."""
-    import warnings
-    warnings.warn(
-        "repro.core.rmw_sharded.rmw_sharded is deprecated; use "
-        "repro.atomics.execute (or execute_sharded for the raw-array "
-        "distributed entry)", DeprecationWarning, stacklevel=2)
-    return execute_sharded(table, indices, values, op, expected, axis=axis,
-                           replica_axes=replica_axes, strategy=strategy,
-                           backend=backend, spec=spec, axis_tiers=axis_tiers,
-                           need_fetched=need_fetched)
 
 
 # ---------------------------------------------------------------------------

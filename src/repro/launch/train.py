@@ -92,10 +92,18 @@ def train(arch: str, *, steps: int = 100, seq_len: int = 256,
 
     fault_cfg = FaultConfig(checkpoint_every=checkpoint_every)
     ctx = use_mesh(mesh, rules or {}) if mesh is not None else _null_ctx()
+    # elastic adoption: every restored state re-lands its live AtomicTables
+    # on the CURRENT mesh (layout re-derivation, not history replay); a
+    # table-free state tree passes through untouched
+    reshard_fn = None
+    if mesh is not None:
+        from repro.runtime.elastic import reshard_tables
+        reshard_fn = lambda s: reshard_tables(s, mesh)  # noqa: E731
     with ctx:
         result = run_with_recovery(one_step, (params, opt_state), steps,
                                    fault_cfg, save_fn, restore_fn,
-                                   failure_injector=failure_injector)
+                                   failure_injector=failure_injector,
+                                   reshard_fn=reshard_fn)
     if saver is not None:
         saver.wait()
     return {"history": history, "steps_done": result.steps_done,

@@ -2,10 +2,12 @@
 
 On a real multi-pod deployment, chip/host loss surfaces as a Python exception
 from the collective runtime; the recovery sequence is: tear down, re-init the
-mesh (possibly smaller — elastic), restore the latest checkpoint, and resume
-from the checkpointed step (the deterministic data pipeline makes the resume
-bit-exact).  This module implements that state machine; the CPU tests drive
-it with injected failures.
+mesh (possibly smaller — elastic), restore the latest checkpoint, reshard
+live `AtomicTable` state onto the new mesh (`reshard_fn`, normally
+`runtime.elastic.reshard_tables` — layout re-derivation, not history
+replay), and resume from the checkpointed step (the deterministic data
+pipeline makes the resume bit-exact).  This module implements that state
+machine; the CPU tests drive it with injected failures.
 """
 
 from __future__ import annotations
@@ -68,20 +70,32 @@ def run_with_recovery(step_fn: Callable[[int, Any], Any],
                       cfg: FaultConfig,
                       save_fn: Callable[[int, Any], None],
                       restore_fn: Callable[[], Optional[tuple]],
-                      failure_injector: Optional[Callable[[int], None]] = None
+                      failure_injector: Optional[Callable[[int], None]] = None,
+                      reshard_fn: Optional[Callable[[Any], Any]] = None
                       ) -> RunResult:
     """Drive `step_fn(step, state) -> state` with checkpoint/restart recovery.
 
     `restore_fn() -> (step, state) | None` returns the latest checkpoint.
     `failure_injector(step)` may raise to simulate chip loss (tests).
+    `reshard_fn(state) -> state`, when given, is applied to every restored
+    state before stepping resumes — the elastic-restart hook: the launcher
+    wires it to `runtime.elastic.reshard_tables` (itself
+    `atomics.reshard.migrate` over the state tree) so live `AtomicTable`s
+    land on the post-failure mesh with their owner-major layout re-derived
+    instead of their RMW history replayed.
     """
     state = init_state
     step = 0
     failures = 0
     restored: List[int] = []
+
+    def _adopt(s):
+        return s if reshard_fn is None else reshard_fn(s)
+
     restored_ck = restore_fn()
     if restored_ck is not None:
         step, state = restored_ck
+        state = _adopt(state)
         restored.append(step)
         log.info("resumed from checkpoint at step %d", step)
     while step < n_steps:
@@ -100,9 +114,12 @@ def run_with_recovery(step_fn: Callable[[int, Any], Any],
                 raise
             ck = restore_fn()
             if ck is None:
-                step, state = 0, init_state
+                # restart from scratch still crosses the mesh change: the
+                # initial state's live tables need adopting too
+                step, state = 0, _adopt(init_state)
             else:
                 step, state = ck
+                state = _adopt(state)
                 restored.append(step)
             time.sleep(0)  # backoff hook
     return RunResult(steps_done=step, failures=failures,

@@ -1,15 +1,15 @@
-"""Unified `repro.atomics` front-end: parity with every legacy entry point.
+"""Unified `repro.atomics` front-end: the ONE public RMW surface.
 
-The acceptance contract of the API redesign (ISSUE 3):
+The acceptance contract of the API redesign (ISSUE 3), post shim removal
+(ISSUE 5 deleted the PR-3 deprecation shims after their one-release window):
 
-* `atomics.execute` is bit-identical to the serialized oracle — and to the
-  deprecated entry points it replaces (``rmw_run``, ``rmw_execute``,
-  ``rmw_sharded``) — for FAA/SWP/MIN/MAX, uniform-expected CAS *and*
-  per-op-expected CAS, single-device and on an 8-fake-device mesh
-  (subprocess half, same pattern as tests/test_rmw_sharded.py).
-* every legacy entry point emits a DeprecationWarning naming its
-  replacement (the CI lane runs with those warnings as errors, so no
-  internal module can regress onto the shims).
+* `atomics.execute` is bit-identical to the serialized oracle for
+  FAA/SWP/MIN/MAX, uniform-expected CAS *and* per-op-expected CAS,
+  single-device and on an 8-fake-device mesh (subprocess half, same
+  pattern as tests/test_rmw_sharded.py).
+* the legacy entry points (``rmw_run``/``rmw.rmw``, ``rmw_execute``,
+  ``rmw_sharded.rmw_sharded``, both old ``arrival_rank`` spellings) are
+  GONE — `test_legacy_shims_are_deleted` pins that they never come back.
 * typed constructors validate shapes; `AtomicTable` handles are pytrees
   carrying the mesh contract; `make_table` wires the ``"rmw_table"``
   logical-sharding rule; a sharded table outside shard_map fails with
@@ -21,7 +21,6 @@ import json
 import os
 import subprocess
 import sys
-import warnings
 
 import jax
 import jax.numpy as jnp
@@ -62,21 +61,15 @@ def _assert_result(res, ref, what, table_only=False):
 # ---------------------------------------------------------------------------
 
 @pytest.mark.parametrize("op", ["faa", "swp", "min", "max"])
-def test_execute_equals_oracle_and_legacy(op):
+def test_execute_equals_oracle(op):
     table, idx, vals = _batch()
     ref = rmw_serialized(table, idx, vals, op)
     res = atomics.execute(table, OPS[op](idx, vals))
     _assert_result(res, ref, f"atomics:{op}")
-    # ... and the legacy spellings answer the same (while warning)
-    from repro.core import rmw_run
-    from repro.core.rmw_engine import rmw_execute
-    with pytest.warns(DeprecationWarning):
-        legacy = rmw_execute(table, idx, vals, op)
-    _assert_result(res, legacy, f"legacy-engine:{op}")
-    with pytest.warns(DeprecationWarning):
-        legacy2 = rmw_run(table, idx, vals, op)
-    np.testing.assert_array_equal(np.asarray(res.table.data),
-                                  np.asarray(legacy2.table))
+    # ... and the raw-array engine entry (the internal tier) agrees
+    from repro.core.rmw_engine import execute_backend
+    raw = execute_backend(table, idx, vals, op)
+    _assert_result(res, raw, f"engine:{op}")
 
 
 def test_execute_cas_uniform_equals_oracle():
@@ -150,20 +143,6 @@ def test_execute_sharded_detection_and_parity_one_device():
     np.testing.assert_array_equal(np.asarray(tab), np.asarray(ref.table))
     np.testing.assert_array_equal(np.asarray(fetched),
                                   np.asarray(ref.fetched))
-
-    # the deprecated distributed entry answers the same (and warns)
-    from repro.core.rmw_sharded import rmw_sharded
-
-    def fn_legacy(t, i, v):
-        with pytest.warns(DeprecationWarning,
-                          match="repro.core.rmw_sharded"):
-            res = rmw_sharded(t, i, v, "faa", axis="x")
-        return res.table, res.fetched, res.success
-
-    tab2, fetched2, _ = _one_dev_shard_map(fn_legacy, mesh, 3, 3)(
-        table, idx, vals)
-    np.testing.assert_array_equal(np.asarray(tab2), np.asarray(tab))
-    np.testing.assert_array_equal(np.asarray(fetched2), np.asarray(fetched))
 
 
 def test_sharded_table_outside_shard_map_raises_with_guidance():
@@ -263,48 +242,32 @@ def test_replica_axes_without_axis_rejected():
 
 
 # ---------------------------------------------------------------------------
-# every deprecated spelling warns (the -W error CI lane enforces no
-# internal module ever reaches these)
+# the PR-3 shims completed their one-release window and are deleted —
+# pin the removal so they cannot quietly come back
 # ---------------------------------------------------------------------------
 
-def test_all_shims_emit_deprecation_warnings():
-    t = jnp.zeros((4,), jnp.int32)
-    i = jnp.asarray([1, 1], jnp.int32)
-    v = jnp.asarray([2, 3], jnp.int32)
-    from repro.core import rmw_engine, rmw_run
+def test_legacy_shims_are_deleted():
+    import repro.core as core
+    from repro.core import rmw_engine, rmw_sharded
     from repro.core import rmw as rmw_mod
-    with pytest.warns(DeprecationWarning, match="repro.atomics.execute"):
-        rmw_engine.rmw_execute(t, i, v, "faa")
-    with pytest.warns(DeprecationWarning, match="repro.atomics.execute"):
-        rmw_run(t, i, v, "faa")
-    with pytest.warns(DeprecationWarning, match="repro.atomics.arrival_rank"):
-        rmw_engine.arrival_rank(i, 4)
-    with pytest.warns(DeprecationWarning, match="repro.atomics.arrival_rank"):
-        rmw_mod.arrival_rank(i)
-    # the sharded shim warns before touching any collective
-    from repro.core.rmw_sharded import rmw_sharded
-    with warnings.catch_warnings(record=True) as w:
-        warnings.simplefilter("always")
-        try:
-            rmw_sharded(t, i, v, "faa", axis="nope")
-        except Exception:
-            pass  # no shard_map context — only the warning matters here
-    assert any(issubclass(x.category, DeprecationWarning) for x in w)
+    for holder, name in ((rmw_mod, "rmw"), (rmw_mod, "arrival_rank"),
+                         (rmw_engine, "rmw_execute"),
+                         (rmw_engine, "arrival_rank"),
+                         (rmw_sharded, "rmw_sharded"),
+                         (core, "rmw_run"), (core, "rmw_execute"),
+                         (core, "arrival_rank"), (core, "RmwConfig")):
+        assert not hasattr(holder, name), \
+            f"{holder.__name__}.{name} shim resurrected"
+    # ... and the internal raw-array entries remain
+    assert callable(rmw_engine.execute_backend)
+    assert callable(rmw_sharded.execute_sharded)
 
 
-def test_arrival_rank_canonical_agrees_with_shims():
+def test_arrival_rank_canonical_spellings_agree():
     keys = jnp.asarray(RNG.integers(0, 5, 64), jnp.int32)
-    want = atomics.arrival_rank(keys, 5)
+    want = atomics.arrival_rank(keys, 5)          # sort-free
     np.testing.assert_array_equal(np.asarray(atomics.arrival_rank(keys)),
-                                  np.asarray(want))
-    from repro.core import rmw_engine
-    from repro.core import rmw as rmw_mod
-    with pytest.warns(DeprecationWarning):
-        np.testing.assert_array_equal(
-            np.asarray(rmw_engine.arrival_rank(keys, 5)), np.asarray(want))
-    with pytest.warns(DeprecationWarning):
-        np.testing.assert_array_equal(
-            np.asarray(rmw_mod.arrival_rank(keys)), np.asarray(want))
+                                  np.asarray(want))  # argsort fallback
 
 
 # ---------------------------------------------------------------------------

@@ -22,6 +22,9 @@ from repro.checkpoint import ckpt as ckpt_lib
 from repro.runtime.elastic import reshard_restore, survivors_mesh
 from repro.sharding import use_mesh
 
+import jax.numpy as jnp
+from repro import atomics
+
 cfg = get_reduced("gemma_2b")
 model = build_model(cfg, attn_impl="ref", remat_policy="none", loss_chunk=64)
 opt_cfg = AdamWConfig()
@@ -32,20 +35,25 @@ rules_a = sh.arch_rules(cfg, mesh_a, "train")
 with use_mesh(mesh_a, rules_a):
     params = model.init(jax.random.PRNGKey(0))
     opt = init_state(params, opt_cfg)
+    counters = atomics.make_table(64, jnp.int32, fill=9)  # live RMW state
 d = tempfile.mkdtemp()
-ckpt_lib.save(d, 5, {"params": params, "opt": opt})
+ckpt_lib.save(d, 5, {"params": params, "opt": opt, "counters": counters})
 
 # restore under a shrunken mesh (lost half the data shards): 2x2
 mesh_b = survivors_mesh({"data": 4, "model": 2}, lost_data_shards=2)
-like = {"params": params, "opt": opt}
+like = {"params": params, "opt": opt, "counters": counters}
 state, _ = reshard_restore(d, 5, like, cfg, mesh_b)
 
-# bitwise identical content, new placement
+# bitwise identical content, new placement — AtomicTable included
+# (its owner-major layout re-derived under mesh_b, not the writer's mesh)
 ok = True
 for a, b in zip(jax.tree.leaves(like), jax.tree.leaves(state)):
     if not np.array_equal(np.asarray(a, np.float32),
                           np.asarray(b, np.float32)):
         ok = False
+tbl = state["counters"]
+ok &= isinstance(tbl, atomics.AtomicTable)
+ok &= tbl.data.sharding.mesh.shape.get("data", 0) == 2
 # and the restored params still produce the same loss on the new mesh
 from repro.data.pipeline import DataConfig, synthetic_batch
 dc = DataConfig(seq_len=16, global_batch=4, vocab_size=cfg.vocab_size)

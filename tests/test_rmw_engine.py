@@ -251,14 +251,14 @@ def test_execute_validates():
                     backend="onehot")
 
 
-def test_rmw_facade_auto_mode():
-    """The legacy facade still answers correctly — and warns (it is a shim)."""
-    from repro.core.rmw import RmwConfig, rmw
+def test_execute_backend_modes_match_oracle():
+    """The raw-array engine entry answers identically across backends (the
+    facade shim this used to exercise is deleted)."""
+    from repro.core.rmw_engine import execute_backend
     table = jnp.zeros((16,), jnp.int32)
     idx = jnp.asarray([1, 1, 2, 15, 1], jnp.int32)
     vals = jnp.asarray([1, 2, 3, 4, 5], jnp.int32)
     ref = rmw_serialized(table, idx, vals, "faa")
     for mode in ("auto", "onehot", "sort", "serialized"):
-        with pytest.warns(DeprecationWarning, match="repro.core.rmw_run"):
-            got = rmw(table, idx, vals, "faa", config=RmwConfig(mode=mode))
+        got = execute_backend(table, idx, vals, "faa", backend=mode)
         _assert_same(ref, got, mode)

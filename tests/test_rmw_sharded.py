@@ -109,7 +109,70 @@ for op in ("faa", "swp", "cas"):
     check(op, "oneshot", True, "hot", axis="dev", replica_axes="pod")
 check("faa", "dense", False, "hot", axis="dev", replica_axes="pod")
 
-# sharded BFS == single-device BFS (same arrival order => same parents)
+# reverse_ranks: oracle on the batches concatenated in DESCENDING device
+# rank (every strategy realizes the same reversed order).  perop=True
+# drives the _execute_cas_perop owner-oracle path, which carries its own
+# per-level un-flip loop.
+def check_reverse(op, strategy, replica_axes=(), n_per=48, m=64,
+                  perop=False):
+    axis = ("pod", "dev") if not replica_axes else "dev"
+    idx = rng.integers(-2, m + 3, (NDEV, n_per))       # includes OOR
+    vals = rng.integers(-5, 6, (NDEV, n_per))
+    table0 = rng.integers(-2, 3, m)
+    if op == "cas":
+        vals = rng.integers(-1, 2, (NDEV, n_per))
+        table0 = rng.integers(-1, 2, m)
+    exps = rng.integers(-1, 2, (NDEV, n_per))          # per-op expected
+    idx_j = jnp.asarray(idx, jnp.int32)
+    vals_j = jnp.asarray(vals, jnp.int32)
+    exps_j = jnp.asarray(exps, jnp.int32)
+    tab_j = jnp.asarray(table0, jnp.int32)
+    tab_spec = SPEC if not replica_axes else P("dev")
+
+    def fn(t, i, v, e):
+        tbl = atomics.AtomicTable(t, axis=axis, replica_axes=replica_axes)
+        if op == "cas":
+            aop = atomics.Cas(i[0], v[0],
+                              expected=e[0] if perop else jnp.int32(0))
+        else:
+            aop = atomics.OP_KINDS[op](i[0], v[0])
+        res = atomics.execute(tbl, aop, strategy=strategy,
+                              reverse_ranks=True)
+        return res.table.data, res.fetched[None], res.success[None]
+
+    tabs, fetched, success = shard_map(
+        fn, (tab_spec, SPEC, SPEC, SPEC), (tab_spec, SPEC, SPEC))(
+        tab_j, idx_j, vals_j, exps_j)
+    flat_i = idx_j[::-1].reshape(-1)
+    flat_v = vals_j[::-1].reshape(-1)
+    valid = (flat_i >= 0) & (flat_i < m)
+    pad_tab = jnp.concatenate([tab_j, jnp.zeros((1,), jnp.int32)])
+    exp_ref = None
+    if op == "cas":
+        exp_ref = (exps_j[::-1].reshape(-1) if perop
+                   else jnp.zeros((flat_i.shape[0],), jnp.int32))
+    ref = rmw_serialized(pad_tab, jnp.where(valid, flat_i, m), flat_v, op,
+                         exp_ref)
+    ok = bool(np.array_equal(np.asarray(tabs).reshape(-1)[:m],
+                             np.asarray(ref.table)[:m]))
+    ok &= bool(np.array_equal(
+        np.asarray(fetched)[::-1].reshape(-1),
+        np.asarray(jnp.where(valid, ref.fetched, 0))))
+    ok &= bool(np.array_equal(np.asarray(success)[::-1].reshape(-1),
+                              np.asarray(ref.success & valid)))
+    tag = "cas_perop" if perop else op
+    out[f"reverse/{tag}/{strategy}/rep={bool(replica_axes)}"] = ok
+
+for strategy in ("oneshot", "hierarchical", "naive"):
+    check_reverse("swp", strategy)
+check_reverse("faa", "oneshot")
+check_reverse("cas", "oneshot")
+check_reverse("swp", "oneshot", replica_axes="pod")
+check_reverse("cas", "oneshot", perop=True)            # owner-oracle path
+check_reverse("cas", "oneshot", replica_axes="pod", perop=True)
+
+# sharded BFS == single-device BFS (same arrival order => same parents),
+# CAS protocol and the SWP+revert protocol (reversed second pass)
 src, dst = kronecker_graph(scale=7, edgefactor=8, seed=3)
 s = np.concatenate([src, dst]); d = np.concatenate([dst, src])
 root = int(s[0])
@@ -118,6 +181,10 @@ r_shard = bfs_sharded(s, d, 128, root=root)
 out["bfs_parents_equal"] = bool(np.array_equal(
     np.asarray(r_local.parent), np.asarray(r_shard.parent)))
 out["bfs_levels"] = [int(r_local.levels), int(r_shard.levels)]
+r_local_swp = bfs(s, d, 128, root=root, op="swp")
+r_shard_swp = bfs_sharded(s, d, 128, root=root, op="swp")
+out["bfs_swp_parents_equal"] = bool(np.array_equal(
+    np.asarray(r_local_swp.parent), np.asarray(r_shard_swp.parent)))
 print("RESULT:" + json.dumps(out))
 """
 
@@ -252,25 +319,19 @@ def test_default_spec_loads_calibration(tmp_path, monkeypatch):
 
 
 def test_core_rmw_namespace_contract():
-    """`from repro.core import rmw` yields the module (PR 2 fix; the old
-    callable-module alias is gone — calling it must TypeError now), while
-    `from repro.core import rmw_sharded` keeps yielding the PR 2 function
-    so legacy callers land on the DeprecationWarning shim, not a break."""
-    import types
-    import jax.numpy as jnp
-    import pytest as _pytest
-    from repro.core import rmw, rmw_run, rmw_sharded
+    """Post shim removal: `from repro.core import rmw` AND
+    `from repro.core import rmw_sharded` both yield plain modules (the PR-2
+    function alias for the latter left with the PR-3 shims), and neither
+    is callable."""
     import sys
+    import types
+    import pytest as _pytest
+    from repro.core import rmw, rmw_sharded
     assert isinstance(rmw, types.ModuleType)
     assert type(rmw) is types.ModuleType          # not a callable subclass
-    # PR 2 surface preserved: the package attr is the shim function, and it
-    # is exactly the one the module defines (full path stays importable)
-    assert rmw_sharded is sys.modules["repro.core.rmw_sharded"].rmw_sharded
-    assert rmw_run is rmw.rmw
-    t = jnp.zeros((4,), jnp.int32)
-    i = jnp.asarray([1, 1], jnp.int32)
-    v = jnp.asarray([2, 3], jnp.int32)
-    with _pytest.warns(DeprecationWarning, match="repro.core.rmw_run"):
-        assert int(rmw_run(t, i, v, "faa").table[1]) == 5
+    assert rmw_sharded is sys.modules["repro.core.rmw_sharded"]
+    assert isinstance(rmw_sharded, types.ModuleType)
     with _pytest.raises(TypeError):
-        rmw(t, i, v, "faa")           # module is no longer callable
+        rmw(None)                     # modules are not callable
+    with _pytest.raises(TypeError):
+        rmw_sharded(None)
