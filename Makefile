@@ -2,7 +2,7 @@ PYTHON ?= python
 # src for the repro package, repo root for the benchmarks package
 export PYTHONPATH := src:.:$(PYTHONPATH)
 
-.PHONY: test test-tier1 test-deprecations smoke bench-rmw \
+.PHONY: test test-tier1 test-deprecations test-chaos smoke bench-rmw \
         bench-rmw-sharded bench-atomics bench-reshard calibrate
 
 # Tier-1 gate + benchmark smoke (what CI runs).
@@ -24,13 +24,32 @@ test-deprecations:
 	$(PYTHON) -W error::DeprecationWarning examples/sharded_atomics.py \
 	  --n-per-device 512 --table 1024
 
+# Chaos lane: deterministic fault injection + bounded-retry CAS loops —
+# the seeded chaos matrix (fault-free bit-equality through recovery),
+# checkpoint-corruption fallback, and the execute_until <= n-round gates.
+# The final line proves the REPRO_CHAOS env hook injects faults into an
+# unmodified caller (and that the run still completes).
+test-chaos:
+	$(PYTHON) -m pytest -q tests/test_chaos.py tests/test_retry.py \
+	  tests/test_checkpoint.py tests/test_fault_tolerance.py
+	REPRO_CHAOS="seed=7,step=1.0@2" $(PYTHON) -c "\
+	from repro.runtime.fault_tolerance import FaultConfig, run_with_recovery;\
+	store = {};\
+	res = run_with_recovery(lambda s, x: x + 1, 0, 12, \
+	    FaultConfig(max_failures=5, checkpoint_every=3, backoff_base_s=0.0), \
+	    lambda s, x: store.__setitem__(s, x), \
+	    lambda: (max(store), store[max(store)]) if store else None);\
+	assert res.failures == 2 and res.steps_done == 12, res;\
+	print('REPRO_CHAOS hook ok:', res)"
+
 # Fast benchmark smoke: latency + bandwidth + the sharded-RMW exchange +
-# the elastic-migration paths (exercises the serialized oracle, the
-# combining path, the Pallas kernel, the 8-fake-device distributed
-# protocol, and both reshard paths end to end).
+# the elastic-migration paths + the fault-recovery/bounded-retry gates
+# (exercises the serialized oracle, the combining path, the Pallas kernel,
+# the 8-fake-device distributed protocol, both reshard paths, and the
+# chaos-driven recovery loop end to end).
 smoke:
 	$(PYTHON) benchmarks/run.py --fast \
-	  --only latency,bandwidth,rmw_sharded,reshard
+	  --only latency,bandwidth,rmw_sharded,reshard,fault_recovery
 
 # Full RMW backend shoot-out; rewrites benchmarks/results/rmw_backends.json.
 bench-rmw:
@@ -54,6 +73,11 @@ bench-reshard:
 # Fit + persist the container HardwareSpec (results/calibrated_spec.json).
 calibrate:
 	$(PYTHON) benchmarks/run.py --only calibrate
+
+# Full fault-recovery + bounded-retry grid; rewrites
+# benchmarks/results/fault_recovery.json.
+bench-fault-recovery:
+	$(PYTHON) benchmarks/run.py --only fault_recovery
 
 dev-deps:
 	pip install -r requirements-dev.txt

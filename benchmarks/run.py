@@ -22,6 +22,11 @@ Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.Csv).
                                                 emits results/reshard.json)
   calibrate         HardwareSpec persistence   (fits engine constants, writes
                                                 results/calibrated_spec.json)
+  fault_recovery    Recovery + bounded retry   (chaos-driven recovery latency,
+                                                execute_until <= n-round gate
+                                                on local and sharded tiers;
+                                                emits results/
+                                                fault_recovery.json)
 """
 
 from __future__ import annotations
@@ -38,10 +43,11 @@ def main() -> None:
                     help="smaller problem sizes (CI)")
     args = ap.parse_args()
 
-    from benchmarks import (bandwidth, bfs, calibrate, contention, latency,
-                            model_validation, operand_size, operands_fetched,
-                            prefetcher, reshard, rmw_backends, rmw_sharded,
-                            roofline, unaligned)
+    from benchmarks import (bandwidth, bfs, calibrate, contention,
+                            fault_recovery, latency, model_validation,
+                            operand_size, operands_fetched, prefetcher,
+                            reshard, rmw_backends, rmw_sharded, roofline,
+                            unaligned)
     from benchmarks.common import Csv
 
     suite = {
@@ -57,6 +63,7 @@ def main() -> None:
         "rmw_sharded": lambda c: rmw_sharded.run(c, fast=args.fast),
         "reshard": lambda c: reshard.run(c, fast=args.fast),
         "calibrate": lambda c: calibrate.run(c, fast=args.fast),
+        "fault_recovery": lambda c: fault_recovery.run(c, fast=args.fast),
         "model_validation": model_validation.run,
         "roofline": roofline.run,
     }

@@ -35,6 +35,11 @@ Public surface::
 
     atomics.arrival_rank(keys, num_keys)               # sort-free FAA-fetch
 
+    atomics.execute_until(table, make_ops, max_rounds=8,
+                          policy="immediate")          # bounded CAS-loop
+                       # retry: failed ops re-batched with their fetched
+                       # pre-images as the next expected (repro.atomics.retry)
+
 Every result is bit-identical to `core.rmw.rmw_serialized` applied to the
 same batch (on a mesh: to the device-rank-ordered concatenation of the
 per-device batches — the arrival-order contract of `core.rmw_sharded`).
@@ -56,6 +61,9 @@ from repro.atomics.table import AtomicTable, make_table  # noqa: F401
 from repro.atomics.layout import TableLayout  # noqa: F401
 from repro.atomics.execute import (  # noqa: F401
     AtomicResult, arrival_rank, execute)
+from repro.atomics.retry import (  # noqa: F401
+    POLICIES, ExponentialBackoff, ImmediateRetry, RetryPolicy, RetryResult,
+    ShrinkBatch, execute_until)
 from repro.atomics.reshard import (  # noqa: F401
     ReshardPlan, cost_replay, migrate, plan_reshard, restore_table,
     select_migration)
@@ -64,6 +72,8 @@ __all__ = [
     "AtomicOp", "Faa", "Swp", "Min", "Max", "Cas", "OP_KINDS",
     "AtomicTable", "make_table", "TableLayout",
     "AtomicResult", "execute", "arrival_rank",
+    "RetryPolicy", "RetryResult", "execute_until", "POLICIES",
+    "ImmediateRetry", "ShrinkBatch", "ExponentialBackoff",
     "ReshardPlan", "plan_reshard", "migrate", "restore_table",
     "select_migration", "cost_replay",
 ]

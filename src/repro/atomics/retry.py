@@ -1,0 +1,394 @@
+"""`execute_until`: bounded-retry combinator for CAS loops, all tiers.
+
+The paper's contention result (Fig. 8) and Lightweight Contention Management
+(arxiv 1305.5800) agree on the fix for CAS storms: **failure feedback must
+drive an explicit policy**, not blind retry.  A failed CAS already *fetched*
+the winning value — that pre-image is exactly the next attempt's
+``expected``, so a retry round never needs a separate read.  This module is
+that loop as a combinator:
+
+* each round executes one batched `atomics.execute` (local engine tier,
+  or the sharded exchange tier when the table is mesh-sharded — the
+  combinator launches its own ``shard_map``, scattering the round's ops
+  over the devices in batch order);
+* only the **failed** ops are re-batched, their fetched pre-images becoming
+  the next round's per-op ``expected`` and their payloads recomputed by the
+  caller's ``make_ops`` (the ``F`` in the lock-free ``CAS(x, v, F(v))``);
+* a pluggable :class:`RetryPolicy` shapes the retry stream per
+  arxiv 1305.5800 — retry everything at once (``immediate``), shrink the
+  per-round batch so fewer ops collide (``shrink``), or space rounds with
+  exponentially growing idle time (``exponential``);
+* the result carries **per-op round counts** — the contention histogram a
+  self-tuning policy needs is a free by-product of the loop.
+
+Convergence: a fully-contended batch (every op targeting one slot) resolves
+exactly one op per round — the serialized-equivalence contract means each
+round's first arriving pending op sees its expected value and wins — so
+``n`` ops need ``<= n`` rounds on every tier.  Uncontended batches resolve
+in one.
+
+Arrival-order caveat: *within* a round, ops execute in batch order (on a
+mesh: the combinator scatters the round's batch contiguously over device
+ranks, so device-rank concatenation re-creates batch order and local and
+sharded tiers produce identical round histories).  *Across* rounds there is
+no global order — a CAS loop is by construction order-free (each op commits
+against whatever value it last observed), which is why `execute_until` may
+be used where a single `execute` batch's serialized order matters not.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.atomics.ops import OP_KINDS, AtomicOp, Cas
+from repro.atomics.table import AtomicTable
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Retry policies (arxiv 1305.5800: contention management as explicit policy)
+# ---------------------------------------------------------------------------
+
+class RetryPolicy:
+    """How failures are re-offered: batch sizing + inter-round spacing.
+
+    ``batch_size(n_pending, rnd)`` says how many of the pending ops round
+    ``rnd`` may issue (the rest wait — fewer concurrent ops, less wasted
+    work under contention); ``delay_s(rnd)`` is idle time *before* round
+    ``rnd`` (0 for the first round).  Subclass to tune; the three classic
+    shapes below are registered in :data:`POLICIES`.
+    """
+
+    name = "custom"
+
+    def batch_size(self, n_pending: int, rnd: int) -> int:
+        return n_pending
+
+    def delay_s(self, rnd: int) -> float:
+        return 0.0
+
+    def __repr__(self):
+        return f"{type(self).__name__}()"
+
+
+class ImmediateRetry(RetryPolicy):
+    """Re-offer every failed op next round, no spacing — optimal when the
+    contention is *self-inflicted* (one batch against one table): each
+    round's serialization resolves one winner per slot regardless."""
+
+    name = "immediate"
+
+
+class ShrinkBatch(RetryPolicy):
+    """Halve (by default) the retry batch each consecutive failing round:
+    the pending set still drains one winner per contended slot per round,
+    but the losers that were going to fail anyway never hit the exchange —
+    less wasted traffic, same round count."""
+
+    name = "shrink"
+
+    def __init__(self, factor: float = 0.5, min_batch: int = 1):
+        if not 0.0 < factor <= 1.0:
+            raise ValueError(f"factor must be in (0, 1], got {factor}")
+        self.factor = factor
+        self.min_batch = max(1, int(min_batch))
+
+    def batch_size(self, n_pending: int, rnd: int) -> int:
+        if rnd == 0:
+            return n_pending
+        return max(self.min_batch, math.ceil(n_pending * self.factor))
+
+
+class ExponentialBackoff(RetryPolicy):
+    """Full retry batches spaced by exponentially growing idle time —
+    the classic shape when the contention is *external* (other writers
+    between rounds), pointless when it is self-inflicted."""
+
+    name = "exponential"
+
+    def __init__(self, base_s: float = 1e-4, factor: float = 2.0,
+                 max_s: float = 0.1):
+        self.base_s = float(base_s)
+        self.factor = float(factor)
+        self.max_s = float(max_s)
+
+    def delay_s(self, rnd: int) -> float:
+        if rnd <= 0:
+            return 0.0
+        return min(self.max_s, self.base_s * self.factor ** (rnd - 1))
+
+
+POLICIES: Dict[str, Callable[[], RetryPolicy]] = {
+    "immediate": ImmediateRetry,
+    "shrink": ShrinkBatch,
+    "exponential": ExponentialBackoff,
+}
+
+
+def _resolve_policy(policy: Union[str, RetryPolicy]) -> RetryPolicy:
+    if isinstance(policy, RetryPolicy):
+        return policy
+    try:
+        return POLICIES[policy]()
+    except KeyError:
+        raise ValueError(f"unknown retry policy {policy!r}; have "
+                         f"{tuple(POLICIES)} or a RetryPolicy instance")
+
+
+# ---------------------------------------------------------------------------
+# Result
+# ---------------------------------------------------------------------------
+
+class RetryResult(NamedTuple):
+    """Outcome of :func:`execute_until` (host arrays, original batch order).
+
+    ``fetched[i]`` is op i's *last observed pre-image* — for a resolved CAS,
+    the value its winning attempt replaced; ``success[i]`` whether it
+    resolved within the round budget; ``rounds[i]`` how many attempts it
+    took (the per-op contention observable; 1 = first try); ``pending``
+    the original positions still unresolved (empty on full convergence).
+    """
+
+    table: AtomicTable
+    fetched: np.ndarray
+    success: np.ndarray
+    rounds: np.ndarray
+    n_rounds: int
+    pending: np.ndarray
+
+
+# ---------------------------------------------------------------------------
+# Sharded round execution: the combinator's own shard_map per round
+# ---------------------------------------------------------------------------
+
+_SHARDED_ROUND_CACHE: Dict[tuple, Any] = {}
+
+
+def _norm_tuple(axes) -> Tuple[str, ...]:
+    if axes is None:
+        return ()
+    return (axes,) if isinstance(axes, str) else tuple(axes)
+
+
+def _sharded_round_fn(mesh, axis: Tuple[str, ...], rep: Tuple[str, ...],
+                      kind: str, backend: str, strategy: str, spec,
+                      distinct_slots):
+    """Build (and cache) the jitted shard_map executing ONE retry round on
+    a mesh-sharded table: ops scattered contiguously over device ranks, so
+    the device-rank arrival order re-creates the round's batch order."""
+    key = (mesh, axis, rep, kind, backend, strategy, id(spec),
+           distinct_slots)
+    fn = _SHARDED_ROUND_CACHE.get(key)
+    if fn is not None:
+        return fn
+    from jax.sharding import PartitionSpec as P
+
+    from repro.atomics.execute import execute
+    from repro.sharding import shard_map_compat
+
+    tab_spec, op_spec = P(axis), P(rep + axis)
+
+    def body(t, i, v, e):
+        tbl = AtomicTable(t, axis=axis if len(axis) > 1 else axis[0],
+                          replica_axes=rep)
+        if kind == "cas":
+            op = Cas(i, v, expected=e)
+        else:
+            op = OP_KINDS[kind](i, v)
+        res = execute(tbl, op, need_fetched=True, backend=backend,
+                      strategy=strategy, spec=spec,
+                      distinct_slots=distinct_slots)
+        return res.table.data, res.fetched, res.success
+
+    fn = jax.jit(shard_map_compat(body, mesh,
+                                  (tab_spec, op_spec, op_spec, op_spec),
+                                  (tab_spec, op_spec, op_spec)))
+    _SHARDED_ROUND_CACHE[key] = fn
+    return fn
+
+
+def _exec_round_sharded(table: AtomicTable, kind: str, idx: np.ndarray,
+                        vals: np.ndarray, exp: Optional[np.ndarray], *,
+                        backend: str, strategy: str, spec, distinct_slots):
+    from repro import sharding as shardlib
+    mesh = getattr(getattr(table.data, "sharding", None), "mesh", None)
+    if mesh is None:
+        mesh = shardlib.active_mesh()
+    if mesh is None:
+        raise ValueError(
+            "execute_until on a sharded AtomicTable needs the mesh: place "
+            "the table data with a NamedSharding (make_table under "
+            "use_mesh) or call under sharding.use_mesh — the combinator "
+            "launches its own shard_map per round, so unlike execute() it "
+            "must be called OUTSIDE shard_map")
+    axis, rep = _norm_tuple(table.axis), _norm_tuple(table.replica_axes)
+    n_dev = math.prod(mesh.shape[a] for a in rep + axis)
+    m = int(table.data.shape[0])
+    k = len(idx)
+    # pad per-device count to a power of two: bounded recompile count as
+    # the pending set drains, padding ops target slot m (the OOR-drop
+    # convention: no table effect, fetched 0, success False — sliced off)
+    per = 1 << max(0, (max(1, -(-k // n_dev)) - 1)).bit_length()
+    total = per * n_dev
+    tbl_dtype = np.asarray(jnp.zeros((), table.data.dtype)).dtype
+    idx_p = np.full(total, m, np.int32)
+    idx_p[:k] = idx
+    vals_p = np.zeros(total, tbl_dtype)
+    vals_p[:k] = vals
+    exp_p = np.zeros(total, tbl_dtype)
+    if exp is not None:
+        exp_p[:k] = exp
+    fn = _sharded_round_fn(mesh, axis, rep, kind, backend, strategy, spec,
+                           distinct_slots)
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    op_sh = NamedSharding(mesh, P(rep + axis))
+    args = [jax.device_put(jnp.asarray(a), op_sh)
+            for a in (idx_p, vals_p, exp_p)]
+    tab, fetched, success = fn(table.data, *args)
+    return (table.with_data(tab), np.asarray(fetched)[:k],
+            np.asarray(success)[:k].astype(bool))
+
+
+def _exec_round(table: AtomicTable, kind: str, idx: np.ndarray,
+                vals: np.ndarray, exp: Optional[np.ndarray], *,
+                backend: str, strategy: str, spec, distinct_slots):
+    if table.is_sharded:
+        return _exec_round_sharded(table, kind, idx, vals, exp,
+                                   backend=backend, strategy=strategy,
+                                   spec=spec, distinct_slots=distinct_slots)
+    from repro.atomics.execute import execute
+    if kind == "cas":
+        op = Cas(jnp.asarray(idx), jnp.asarray(vals),
+                 expected=jnp.asarray(exp))
+    else:
+        op = OP_KINDS[kind](jnp.asarray(idx), jnp.asarray(vals))
+    res = execute(table, op, need_fetched=True, backend=backend, spec=spec)
+    return (res.table, np.asarray(res.fetched),
+            np.asarray(res.success).astype(bool))
+
+
+# ---------------------------------------------------------------------------
+# The combinator
+# ---------------------------------------------------------------------------
+
+def execute_until(table: Union[AtomicTable, Array],
+                  make_ops: Callable, *,
+                  max_rounds: int = 16,
+                  policy: Union[str, RetryPolicy] = "immediate",
+                  backend: str = "auto", strategy: str = "auto",
+                  spec=None, distinct_slots: Optional[int] = None,
+                  sleep_fn: Callable[[float], None] = time.sleep
+                  ) -> RetryResult:
+    """Drive a batch of CAS loops to convergence in ``<= max_rounds`` rounds.
+
+    ``make_ops`` is called twice per shape of the loop:
+
+    * ``make_ops(None, None)`` (round 0) must return the initial
+      :class:`~repro.atomics.ops.AtomicOp` batch — typically a ``Cas``
+      (scalar or per-op ``expected``); any other op kind trivially resolves
+      in one round.
+    * ``make_ops(slots, observed)`` (later rounds) receives the still-
+      pending ops' table slots and their latest fetched pre-images and
+      returns the new *values* array for exactly those ops (the ``F`` in
+      the lock-free ``CAS(x, v, F(v))``), or a full ``AtomicOp`` over them
+      to also override ``expected``, or ``None`` to give up early.  The
+      combinator supplies ``expected = observed`` — the CAS-failure
+      feedback loop of arxiv 1305.5800.
+
+    The table may be local or mesh-sharded; for a sharded table the
+    combinator launches its own ``shard_map`` per round (call it *outside*
+    ``shard_map``), scattering each round's pending ops contiguously over
+    device ranks so both tiers produce identical round histories.
+
+    Returns a :class:`RetryResult`; ``success`` is all-True iff every op
+    resolved within the budget, and ``rounds`` is the per-op contention
+    observable (attempts until success).
+    """
+    pol = _resolve_policy(policy)
+    if max_rounds < 1:
+        raise ValueError(f"max_rounds must be >= 1, got {max_rounds}")
+    if not isinstance(table, AtomicTable):
+        table = AtomicTable(table)
+    op0 = make_ops(None, None)
+    if not isinstance(op0, AtomicOp):
+        raise TypeError(
+            f"make_ops(None, None) must return an atomics op batch "
+            f"(got {type(op0).__name__}) — e.g. "
+            f"atomics.Cas(indices, values, expected=...)")
+    kind = op0.kind
+    n = int(op0.indices.shape[0])
+    tbl_dtype = np.asarray(jnp.zeros((), table.data.dtype)).dtype
+    slots = np.asarray(op0.indices, np.int32).copy()
+    values = np.asarray(op0.values, tbl_dtype).copy()
+    is_cas = kind == "cas"
+    if is_cas:
+        expected = np.broadcast_to(
+            np.asarray(op0.expected, tbl_dtype), (n,)).copy()
+    else:
+        expected = None
+    observed = (expected.copy() if is_cas
+                else np.zeros(n, tbl_dtype))   # latest pre-image per op
+    success = np.zeros(n, bool)
+    rounds = np.zeros(n, np.int64)
+    pending = np.arange(n)
+
+    n_rounds = 0
+    while len(pending) and n_rounds < max_rounds:
+        rnd = n_rounds
+        if rnd > 0:
+            d = pol.delay_s(rnd)
+            if d > 0:
+                sleep_fn(d)
+            made = make_ops(slots[pending], observed[pending])
+            if made is None:
+                break
+            if isinstance(made, AtomicOp):
+                if made.kind != kind or \
+                        int(made.indices.shape[0]) != len(pending):
+                    raise ValueError(
+                        f"make_ops must re-batch exactly the pending ops: "
+                        f"wanted {len(pending)} {kind!r} ops, got "
+                        f"{int(made.indices.shape[0])} {made.kind!r}")
+                slots[pending] = np.asarray(made.indices, np.int32)
+                values[pending] = np.asarray(made.values, tbl_dtype)
+                if is_cas:
+                    expected[pending] = np.broadcast_to(
+                        np.asarray(made.expected, tbl_dtype),
+                        (len(pending),))
+            else:
+                vals_new = np.asarray(made, tbl_dtype)
+                if vals_new.shape != (len(pending),):
+                    raise ValueError(
+                        f"make_ops returned values of shape "
+                        f"{vals_new.shape}; want ({len(pending)},) — one "
+                        f"value per pending op")
+                values[pending] = vals_new
+                if is_cas:
+                    # the feedback loop: pre-image becomes next expected
+                    expected[pending] = observed[pending]
+        k = max(1, min(pol.batch_size(len(pending), rnd), len(pending)))
+        issue, defer = pending[:k], pending[k:]
+        table, fetched, ok = _exec_round(
+            table, kind, slots[issue], values[issue],
+            expected[issue] if is_cas else None,
+            backend=backend, strategy=strategy, spec=spec,
+            distinct_slots=distinct_slots)
+        observed[issue] = fetched
+        rounds[issue] += 1
+        success[issue] = ok
+        # freshly failed ops lead the next round: their pre-images are
+        # current, so a round issuing any of them always makes progress;
+        # deferred ops (stale pre-images under a shrinking policy) trail
+        pending = np.concatenate([issue[~ok], defer])
+        n_rounds += 1
+
+    return RetryResult(table=table, fetched=observed, success=success,
+                       rounds=rounds, n_rounds=n_rounds,
+                       pending=np.sort(pending))

@@ -19,7 +19,9 @@ restores bit-identical on mesh B (the elastic-resize contract).
 
 from __future__ import annotations
 
+import hashlib
 import json
+import logging
 import os
 import shutil
 import threading
@@ -33,6 +35,18 @@ from repro.atomics.layout import norm_axes
 from repro.atomics.table import AtomicTable
 
 PyTree = Any
+
+log = logging.getLogger("repro.checkpoint")
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint directory failed integrity validation: missing/unreadable
+    manifest or arrays, truncated npz, or a per-array sha256 mismatch.
+    `restore_latest_valid` treats it as "walk back one step"."""
+
+
+def _sha256(a: np.ndarray) -> str:
+    return hashlib.sha256(np.ascontiguousarray(a).tobytes()).hexdigest()
 
 
 def _is_table(x) -> bool:
@@ -88,6 +102,10 @@ def save(ckpt_dir: str, step: int, tree: PyTree,
         "shapes": [list(v.shape) for v in leaves],
         "dtypes": dtypes,
         "atomic_tables": tables,
+        # per-array integrity (over the stored bytes, post bf16-view):
+        # restore validates these, restore_latest_valid walks back on
+        # mismatch instead of resuming from silently corrupt state
+        "checksums": {k: _sha256(v) for k, v in zip(keys, leaves)},
         "extra": extra or {},
     }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
@@ -133,19 +151,47 @@ class AsyncCheckpointer:
             raise err
 
     def gc(self) -> None:
+        """Keep-last-k, with one hard guarantee: the newest step that still
+        passes validation is never deleted, even when it has fallen out of
+        the keep window because every newer step is corrupt — otherwise a
+        burst of torn writes could gc away the only restorable state.
+        (Validation walks newest-first and stops at the first valid step,
+        so the common all-healthy case hashes exactly one checkpoint.)"""
+        if self.keep <= 0:
+            return
         steps = list_steps(self.ckpt_dir)
-        for s in steps[:-self.keep] if self.keep > 0 else []:
-            shutil.rmtree(os.path.join(self.ckpt_dir, f"step-{s:08d}"),
-                          ignore_errors=True)
+        keep_set = set(steps[-self.keep:])
+        for s in reversed(steps):
+            if validate_step(self.ckpt_dir, s):
+                keep_set.add(s)      # the last validated step survives gc
+                break
+        for s in steps:
+            if s not in keep_set:
+                shutil.rmtree(os.path.join(self.ckpt_dir, f"step-{s:08d}"),
+                              ignore_errors=True)
 
 
 def list_steps(ckpt_dir: str) -> List[int]:
+    """Steps with a plausible checkpoint directory.  Tolerant by design:
+    a ``step-garbage`` name or a ``step-N`` directory whose manifest is
+    gone (torn delete, external mangling) is *skipped*, never raised — one
+    bad directory must not brick `latest_step`/`restore_latest_valid`."""
     if not os.path.isdir(ckpt_dir):
         return []
     out = []
     for name in os.listdir(ckpt_dir):
-        if name.startswith("step-"):
-            out.append(int(name.split("-")[1]))
+        if not name.startswith("step-"):
+            continue
+        try:
+            step = int(name.split("-", 1)[1])
+        except ValueError:
+            log.warning("ignoring non-step entry %r in %s", name, ckpt_dir)
+            continue
+        if not os.path.isfile(os.path.join(ckpt_dir, name, "manifest.json")):
+            log.warning("ignoring manifest-less checkpoint dir %r in %s",
+                        name, ckpt_dir)
+            continue
+        out.append(step)
     return sorted(out)
 
 
@@ -154,20 +200,71 @@ def latest_step(ckpt_dir: str) -> Optional[int]:
     return steps[-1] if steps else None
 
 
+def _step_path(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"step-{step:08d}")
+
+
+def _load_validated(path: str, *, validate: bool = True
+                    ) -> Tuple[Dict, Dict[str, np.ndarray]]:
+    """Read manifest + arrays, raising :class:`CheckpointCorruptError` on
+    any integrity failure: unreadable/undecodable manifest, missing or
+    truncated npz, a manifest key absent from the archive, or (when the
+    manifest carries ``checksums`` — pre-hardening checkpoints do not) a
+    per-array sha256 mismatch.  ``validate=False`` skips only the hash
+    comparison; structural damage always raises."""
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise CheckpointCorruptError(f"{path}: unreadable manifest ({e})")
+    try:
+        with np.load(os.path.join(path, "arrays.npz")) as npz:
+            data = {k: npz[k] for k in npz.files}
+    except Exception as e:  # noqa: BLE001 — BadZipFile/OSError/ValueError:
+        # a truncated or torn archive surfaces differently per numpy/zlib
+        # version; all of them mean the same thing here
+        raise CheckpointCorruptError(f"{path}: unreadable arrays.npz ({e})")
+    missing = [k for k in manifest.get("keys", []) if k not in data]
+    if missing:
+        raise CheckpointCorruptError(
+            f"{path}: arrays.npz is missing leaves {missing[:4]}")
+    checksums = manifest.get("checksums")
+    if validate and checksums:
+        for key, want in checksums.items():
+            if key in data and _sha256(data[key]) != want:
+                raise CheckpointCorruptError(
+                    f"{path}: sha256 mismatch on {key!r} — array bytes do "
+                    f"not match the manifest (bit rot or torn write)")
+    return manifest, data
+
+
+def validate_step(ckpt_dir: str, step: int) -> bool:
+    """True iff step's checkpoint passes full integrity validation."""
+    try:
+        _load_validated(_step_path(ckpt_dir, step))
+        return True
+    except CheckpointCorruptError:
+        return False
+
+
 def restore(ckpt_dir: str, step: int, like: PyTree,
-            sharding_fn: Optional[Callable[[str, Any], Any]] = None
-            ) -> Tuple[PyTree, Dict]:
+            sharding_fn: Optional[Callable[[str, Any], Any]] = None,
+            *, validate: bool = True) -> Tuple[PyTree, Dict]:
     """Restore into the structure of `like`.  `sharding_fn(key, abstract)` may
     return a Sharding per leaf — this is the elastic reshard-on-load hook:
     leaves are device_put under the *current* mesh regardless of how many
     hosts/chips wrote the checkpoint.  `AtomicTable` leaves in `like` bypass
     `sharding_fn` (it is never called for them): they restore through
     `reshard.restore_table`, which re-derives the owner-major layout from
-    the handle's contract under the active mesh."""
-    path = os.path.join(ckpt_dir, f"step-{step:08d}")
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
-    data = np.load(os.path.join(path, "arrays.npz"))
+    the handle's contract under the active mesh.
+
+    Integrity: the manifest's per-array sha256 checksums are verified
+    before any leaf is materialized (``validate=False`` skips the hash
+    walk); any structural or checksum failure raises
+    :class:`CheckpointCorruptError` — callers that must survive a corrupt
+    newest step use :func:`restore_latest_valid` instead."""
+    path = _step_path(ckpt_dir, step)
+    manifest, data = _load_validated(path, validate=validate)
     leaves_like, treedef = jax.tree_util.tree_flatten(like, is_leaf=_is_table)
     assert len(leaves_like) == len(manifest["keys"]), \
         "checkpoint structure mismatch"
@@ -198,3 +295,31 @@ def restore(ckpt_dir: str, step: int, like: PyTree,
         new_leaves.append(jnp.asarray(arr).astype(ref.dtype)
                           if hasattr(ref, "dtype") else arr)
     return jax.tree_util.tree_unflatten(treedef, new_leaves), manifest["extra"]
+
+
+def restore_latest_valid(ckpt_dir: str, like: PyTree,
+                         sharding_fn: Optional[Callable[[str, Any], Any]]
+                         = None) -> Optional[Tuple[int, PyTree, Dict]]:
+    """Restore the newest checkpoint that passes validation, walking
+    *backward* past corrupt/truncated/mangled steps instead of crashing on
+    the newest — the recovery loop's restore primitive (a fault during or
+    after `save` must cost one checkpoint interval, never the run).
+
+    Returns ``(step, tree, extra)`` or None when no step restores cleanly.
+    Every skipped step is logged with its failure; a skipped step is NOT
+    deleted (post-mortem evidence, and `AsyncCheckpointer.gc` already
+    refuses to drop the newest valid step).
+    """
+    for step in reversed(list_steps(ckpt_dir)):
+        try:
+            tree, extra = restore(ckpt_dir, step, like,
+                                  sharding_fn=sharding_fn)
+            return step, tree, extra
+        except Exception as e:  # noqa: BLE001 — a corrupt manifest can
+            # surface as CheckpointCorruptError, AssertionError (structure
+            # mismatch), KeyError, or an np/json decode error; all mean
+            # "this step is unusable, try the previous one"
+            log.warning("checkpoint step %d failed validation/restore "
+                        "(%s: %s); falling back to the previous step",
+                        step, type(e).__name__, e)
+    return None

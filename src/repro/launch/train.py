@@ -26,6 +26,7 @@ from repro.launch import shardings as sh
 from repro.launch.steps import make_train_step
 from repro.models.model import build_model
 from repro.optim.adamw import AdamWConfig, init_state
+from repro.runtime.chaos import FaultPlan
 from repro.runtime.fault_tolerance import (FaultConfig, StragglerMonitor,
                                            run_with_recovery)
 from repro.sharding import use_mesh
@@ -39,8 +40,13 @@ def train(arch: str, *, steps: int = 100, seq_len: int = 256,
           mesh=None, rules: Optional[Dict] = None, lr: float = 3e-4,
           microbatches: int = 1, log_every: int = 10,
           failure_injector=None, seed: int = 0,
-          remat_policy: str = "none") -> Dict[str, Any]:
-    """Returns final metrics dict.  Deterministic given (arch, seed, steps)."""
+          remat_policy: str = "none",
+          chaos: Optional[FaultPlan] = None) -> Dict[str, Any]:
+    """Returns final metrics dict.  Deterministic given (arch, seed, steps)
+    — including under an injected fault schedule (`chaos`, or the
+    ``REPRO_CHAOS`` env hook when None): recovery restores the latest
+    *valid* checkpoint and replays, so the final state is bit-equal to a
+    fault-free run."""
     cfg = get_reduced(arch) if reduced else get_config(arch)
     model = build_model(cfg, attn_impl="chunked", remat_policy=remat_policy,
                         loss_chunk=2048)
@@ -55,6 +61,18 @@ def train(arch: str, *, steps: int = 100, seq_len: int = 256,
     step_fn = jax.jit(make_train_step(model, opt_cfg,
                                       microbatches=microbatches),
                       donate_argnums=(0, 1))
+
+    # step_fn DONATES its inputs, so the initial buffers are consumed by
+    # step 0 — a post-failure scratch restart must rebuild state, not
+    # reuse them.  First call hands out the arrays built above; later
+    # calls re-init deterministically from the same seed.
+    _first_init = [(params, opt_state)]
+
+    def fresh_state():
+        if _first_init:
+            return _first_init.pop()
+        p = model.init(jax.random.PRNGKey(seed))
+        return p, init_state(p, opt_cfg)
 
     saver = AsyncCheckpointer(ckpt_dir, keep=3) if ckpt_dir else None
     monitor = StragglerMonitor(n_hosts=1, cfg=FaultConfig())
@@ -83,11 +101,20 @@ def train(arch: str, *, steps: int = 100, seq_len: int = 256,
     def restore_fn():
         if not ckpt_dir:
             return None
-        last = ckpt_lib.latest_step(ckpt_dir)
-        if last is None:
-            return None
+        # if the saver's background thread died mid-write, surface it here
+        # (and drop the torn step on the floor: restore_latest_valid walks
+        # straight past it to the newest checkpoint that checksums clean)
+        if saver is not None:
+            try:
+                saver.wait()
+            except Exception as e:  # noqa: BLE001 — recovery handles it
+                log.warning("async save failed (%s); restoring the newest "
+                            "valid step instead", e)
         like = {"params": params, "opt": opt_state}
-        tree, _ = ckpt_lib.restore(ckpt_dir, last, like)
+        got = ckpt_lib.restore_latest_valid(ckpt_dir, like)
+        if got is None:
+            return None
+        last, tree, _extra = got
         return last, (tree["params"], tree["opt"])
 
     fault_cfg = FaultConfig(checkpoint_every=checkpoint_every)
@@ -100,14 +127,15 @@ def train(arch: str, *, steps: int = 100, seq_len: int = 256,
         from repro.runtime.elastic import reshard_tables
         reshard_fn = lambda s: reshard_tables(s, mesh)  # noqa: E731
     with ctx:
-        result = run_with_recovery(one_step, (params, opt_state), steps,
+        result = run_with_recovery(one_step, fresh_state, steps,
                                    fault_cfg, save_fn, restore_fn,
                                    failure_injector=failure_injector,
-                                   reshard_fn=reshard_fn)
+                                   reshard_fn=reshard_fn, chaos=chaos)
     if saver is not None:
         saver.wait()
     return {"history": history, "steps_done": result.steps_done,
             "failures": result.failures,
+            "backoff_total_s": result.backoff_total_s,
             "final_loss": history[-1]["loss"] if history else None}
 
 
@@ -132,11 +160,15 @@ def main() -> None:
     ap.add_argument("--ckpt-dir", default=None)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--chaos", default=None, metavar="SPEC",
+                    help="fault-injection spec, e.g. 'seed=7,step=0.05,"
+                         "ckpt_save=0.1@2' (same syntax as REPRO_CHAOS)")
     args = ap.parse_args()
+    chaos = FaultPlan.from_spec(args.chaos) if args.chaos else None
     out = train(args.arch, steps=args.steps, seq_len=args.seq_len,
                 global_batch=args.global_batch, reduced=not args.full,
                 ckpt_dir=args.ckpt_dir, lr=args.lr,
-                microbatches=args.microbatches)
+                microbatches=args.microbatches, chaos=chaos)
     print(json.dumps({k: v for k, v in out.items() if k != "history"}))
 
 

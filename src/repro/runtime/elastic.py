@@ -19,10 +19,15 @@ restarts.
 
 from __future__ import annotations
 
+import logging
 from typing import Any, Dict, Optional
 
 import jax
+import jax.numpy as jnp
+import numpy as np
 from jax.sharding import Mesh, NamedSharding
+
+log = logging.getLogger("repro.runtime")
 
 from repro.atomics.table import AtomicTable
 from repro.checkpoint import ckpt as ckpt_lib
@@ -90,13 +95,36 @@ def reshard_tables(state: Any, new_mesh: Mesh, *, path: str = "auto",
     slot exchange when the fleet is unchanged, the host roundtrip when it
     grew or shrank), keeping their axis contract where the new mesh still
     carries those axes.  Non-table leaves pass through untouched.
+
+    Degradation ladder: this runs *inside the recovery loop*, where a
+    failure means another restore/replay cycle — so a broken migration
+    path must degrade, not crash.  Per table: the requested path (the
+    in-collective ``exchange`` under ``"auto"``) -> the host-roundtrip
+    ``device_put`` (always topologically feasible) -> a plain **local
+    handle** (host gather, contract dropped) as the floor.  Each
+    degradation is logged; the data is bit-identical on every rung, only
+    placement quality degrades.
     """
     from repro.atomics import reshard as reshard_lib
 
     def one(x):
         if not _is_table(x) or not x.is_sharded:
             return x
-        return reshard_lib.migrate(x, new_mesh, path=path, spec=spec)
+        try:
+            return reshard_lib.migrate(x, new_mesh, path=path, spec=spec)
+        except Exception as e:  # noqa: BLE001 — mid-recovery, degrade
+            log.warning("table migration (path=%s) onto %s failed (%s: %s); "
+                        "degrading to device_put", path, new_mesh,
+                        type(e).__name__, e)
+        if path != "device_put":
+            try:
+                return reshard_lib.migrate(x, new_mesh, path="device_put",
+                                           spec=spec)
+            except Exception as e:  # noqa: BLE001
+                log.warning("device_put migration failed too (%s: %s); "
+                            "degrading to a local handle",
+                            type(e).__name__, e)
+        return AtomicTable(jnp.asarray(np.asarray(x.data)))
 
     return jax.tree_util.tree_map(one, state, is_leaf=_is_table)
 

@@ -2,22 +2,48 @@
 
 On a real multi-pod deployment, chip/host loss surfaces as a Python exception
 from the collective runtime; the recovery sequence is: tear down, re-init the
-mesh (possibly smaller — elastic), restore the latest checkpoint, reshard
-live `AtomicTable` state onto the new mesh (`reshard_fn`, normally
+mesh (possibly smaller — elastic), restore the latest VALID checkpoint
+(`checkpoint.ckpt.restore_latest_valid` walks back past corrupt ones),
+reshard live `AtomicTable` state onto the new mesh (`reshard_fn`, normally
 `runtime.elastic.reshard_tables` — layout re-derivation, not history
 replay), and resume from the checkpointed step (the deterministic data
 pipeline makes the resume bit-exact).  This module implements that state
-machine; the CPU tests drive it with injected failures.
+machine.
+
+Recovery pacing follows Lightweight Contention Management
+(arxiv 1305.5800): failure feedback drives an **explicit policy** —
+exponential backoff with deterministic jitter between recovery attempts
+(so a fleet of restarting hosts does not re-stampede the same resource),
+a wall-clock ``deadline_s`` budget after which recovery gives up, and a
+retryable/fatal split (`FatalFault`, ``FaultConfig.fatal_types``) so
+misconfiguration is never retried like chip loss.
+
+Faults are injected by the deterministic chaos subsystem
+(`runtime.chaos.FaultPlan`) at the named sites of the loop —
+``straggler_delay`` / ``step`` / ``ckpt_save`` / ``ckpt_restore`` /
+``reshard`` — seeded and replayable; the legacy ``failure_injector``
+callback is kept as a thin shim for hand-written step-site crashes.  Set
+``REPRO_CHAOS`` (e.g. ``"seed=7,step=0.05,ckpt_save=0.1@2"``) to run any
+caller under faults without code changes.
 """
 
 from __future__ import annotations
 
 import logging
+import random
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional
+from typing import Any, Callable, List, Optional, Tuple
+
+from repro.runtime.chaos import FaultPlan
 
 log = logging.getLogger("repro.runtime")
+
+
+class FatalFault(Exception):
+    """A failure recovery must NOT absorb (misconfiguration, corrupted
+    source of truth, operator abort).  Raising it — or any class listed in
+    ``FaultConfig.fatal_types`` — propagates immediately, no retry."""
 
 
 @dataclass
@@ -26,6 +52,26 @@ class FaultConfig:
     checkpoint_every: int = 50
     straggler_window: int = 20
     straggler_threshold: float = 2.0     # x median step time
+
+    # recovery pacing (arxiv 1305.5800: explicit backoff, not blind retry)
+    backoff_base_s: float = 0.01         # first retry delay
+    backoff_factor: float = 2.0          # growth per consecutive failure
+    backoff_max_s: float = 2.0           # delay ceiling
+    backoff_jitter: float = 0.1          # ± fraction, de-stampedes a fleet
+    backoff_seed: int = 0                # deterministic jitter stream
+    deadline_s: Optional[float] = None   # wall-clock recovery budget
+    fatal_types: Tuple[type, ...] = ()   # never retried (FatalFault always)
+
+
+def backoff_delay(cfg: FaultConfig, failures: int) -> float:
+    """Delay before recovery attempt ``failures`` (1-based): capped
+    exponential with deterministic jitter — a pure function of
+    ``(cfg, failures)``, so a replayed chaos run paces identically."""
+    base = min(cfg.backoff_max_s,
+               cfg.backoff_base_s * cfg.backoff_factor ** max(0, failures - 1))
+    u = random.Random(cfg.backoff_seed * 1_000_003 + failures).uniform(-1.0,
+                                                                       1.0)
+    return max(0.0, base * (1.0 + cfg.backoff_jitter * u))
 
 
 class StragglerMonitor:
@@ -62,6 +108,7 @@ class RunResult:
     steps_done: int
     failures: int
     restored_from: List[int] = field(default_factory=list)
+    backoff_total_s: float = 0.0
 
 
 def run_with_recovery(step_fn: Callable[[int, Any], Any],
@@ -71,56 +118,115 @@ def run_with_recovery(step_fn: Callable[[int, Any], Any],
                       save_fn: Callable[[int, Any], None],
                       restore_fn: Callable[[], Optional[tuple]],
                       failure_injector: Optional[Callable[[int], None]] = None,
-                      reshard_fn: Optional[Callable[[Any], Any]] = None
+                      reshard_fn: Optional[Callable[[Any], Any]] = None,
+                      chaos: Optional[FaultPlan] = None,
+                      sleep_fn: Callable[[float], None] = time.sleep
                       ) -> RunResult:
     """Drive `step_fn(step, state) -> state` with checkpoint/restart recovery.
 
-    `restore_fn() -> (step, state) | None` returns the latest checkpoint.
-    `failure_injector(step)` may raise to simulate chip loss (tests).
+    `init_state` is the starting state, or a ZERO-ARG FACTORY returning a
+    fresh one — pass a factory whenever `step_fn` donates its input
+    buffers (jit ``donate_argnums``): a post-failure scratch restart must
+    rebuild state, because the original buffers were consumed by step 0.
+    `restore_fn() -> (step, state) | None` returns the latest *valid*
+    checkpoint (wire it to `ckpt.restore_latest_valid` so a corrupt newest
+    step costs one checkpoint interval, not the run).
     `reshard_fn(state) -> state`, when given, is applied to every restored
     state before stepping resumes — the elastic-restart hook: the launcher
     wires it to `runtime.elastic.reshard_tables` (itself
     `atomics.reshard.migrate` over the state tree) so live `AtomicTable`s
     land on the post-failure mesh with their owner-major layout re-derived
     instead of their RMW history replayed.
+
+    `chaos` is the fault schedule (`runtime.chaos.FaultPlan`); None reads
+    ``REPRO_CHAOS`` from the environment (null plan when unset).
+    `failure_injector(step)` is the legacy hand-written step-site hook,
+    kept as a thin shim — prefer a seeded plan.
+
+    Every failure is classified: ``FatalFault`` / ``cfg.fatal_types``
+    propagate untouched; anything else is retried behind
+    :func:`backoff_delay` (logged, accumulated in
+    ``RunResult.backoff_total_s``) until ``max_failures`` or the
+    ``deadline_s`` wall-clock budget is exhausted.  A failure during
+    restore itself is retryable the same way.
     """
-    state = init_state
-    step = 0
+    plan = chaos if chaos is not None else FaultPlan.from_env()
+    t_start = time.monotonic()
     failures = 0
+    backoff_total = 0.0
     restored: List[int] = []
 
-    def _adopt(s):
-        return s if reshard_fn is None else reshard_fn(s)
+    def _absorb(e: BaseException, what: str) -> None:
+        """Count a failure; re-raise fatal/over-budget, else back off."""
+        nonlocal failures, backoff_total
+        if isinstance(e, FatalFault) or isinstance(e, cfg.fatal_types):
+            log.error("%s failed with fatal %s: %s — not retrying",
+                      what, type(e).__name__, e)
+            raise e
+        failures += 1
+        log.warning("%s failed (%s: %s); recovery %d/%d", what,
+                    type(e).__name__, e, failures, cfg.max_failures)
+        if failures > cfg.max_failures:
+            raise e
+        elapsed = time.monotonic() - t_start
+        if cfg.deadline_s is not None and elapsed > cfg.deadline_s:
+            raise TimeoutError(
+                f"recovery deadline {cfg.deadline_s:.3f}s exceeded "
+                f"({elapsed:.3f}s elapsed, {failures} failures); "
+                f"last error: {type(e).__name__}: {e}") from e
+        delay = backoff_delay(cfg, failures)
+        backoff_total += delay
+        log.info("recovery backoff: sleeping %.4fs before attempt %d",
+                 delay, failures + 1)
+        sleep_fn(delay)
 
-    restored_ck = restore_fn()
-    if restored_ck is not None:
-        step, state = restored_ck
-        state = _adopt(state)
-        restored.append(step)
+    def _adopt(s):
+        if reshard_fn is None:
+            return s
+        plan.visit("reshard")
+        return reshard_fn(s)
+
+    def _initial():
+        return init_state() if callable(init_state) else init_state
+
+    def _restore_and_adopt(scratch_adopts: bool) -> Tuple[int, Any]:
+        plan.visit("ckpt_restore")
+        ck = restore_fn()
+        if ck is None:
+            # a POST-FAILURE restart from scratch still crosses the mesh
+            # change, so the initial state's live tables need adopting;
+            # scratch at startup does not — init_state was built under
+            # the current mesh (tests/test_reshard.py pins both halves)
+            return 0, _adopt(_initial()) if scratch_adopts else _initial()
+        s, st = ck
+        st = _adopt(st)
+        restored.append(s)
+        return s, st
+
+    def _recover(what: str, scratch_adopts: bool = True) -> Tuple[int, Any]:
+        while True:
+            try:
+                return _restore_and_adopt(scratch_adopts)
+            except Exception as e:  # noqa: BLE001 — restore is retryable too
+                _absorb(e, what)
+
+    step, state = _recover("initial restore", scratch_adopts=False)
+    if restored:
         log.info("resumed from checkpoint at step %d", step)
     while step < n_steps:
         try:
-            if failure_injector is not None:
+            plan.visit("straggler_delay", step=step)
+            if failure_injector is not None:   # legacy step-site shim
                 failure_injector(step)
+            plan.visit("step", step=step)
             state = step_fn(step, state)
             step += 1
             if step % cfg.checkpoint_every == 0 or step == n_steps:
+                plan.visit("ckpt_save", step=step)
                 save_fn(step, state)
         except Exception as e:  # noqa: BLE001 — chip loss shows up as generic
-            failures += 1
-            log.warning("step %d failed (%s); recovery %d/%d", step, e,
-                        failures, cfg.max_failures)
-            if failures > cfg.max_failures:
-                raise
-            ck = restore_fn()
-            if ck is None:
-                # restart from scratch still crosses the mesh change: the
-                # initial state's live tables need adopting too
-                step, state = 0, _adopt(init_state)
-            else:
-                step, state = ck
-                state = _adopt(state)
-                restored.append(step)
-            time.sleep(0)  # backoff hook
+            _absorb(e, f"step {step}")
+            step, state = _recover("restore")
     return RunResult(steps_done=step, failures=failures,
-                     restored_from=restored)
+                     restored_from=restored,
+                     backoff_total_s=backoff_total)

@@ -1,0 +1,222 @@
+"""Deterministic fault injection (`runtime.chaos`) + the seeded chaos matrix.
+
+The acceptance contract of the robustness layer (ISSUE 6): a seeded storm
+of faults at every site of the recovery loop — step crashes, saves that
+never land, restores that die, reshard failures, straggler stalls — must
+complete through `run_with_recovery` with the final state (including a
+live `AtomicTable`) **bit-equal** to a fault-free run, for every seed in
+the matrix.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import atomics
+from repro.checkpoint import ckpt
+from repro.runtime.chaos import (CHAOS_ENV, SITES, ChaosError, FaultPlan,
+                                 SiteSpec)
+from repro.runtime.fault_tolerance import FaultConfig, run_with_recovery
+
+
+# ---------------------------------------------------------------------------
+# FaultPlan mechanics
+# ---------------------------------------------------------------------------
+
+def _fires(plan, site, visits):
+    return [plan.fire(site) for _ in range(visits)]
+
+
+def test_same_seed_same_schedule():
+    sites = {"step": 0.3, "ckpt_save": 0.5}
+    a = FaultPlan(7, sites)
+    b = FaultPlan(7, sites)
+    for site in ("step", "ckpt_save"):
+        assert _fires(a, site, 200) == _fires(b, site, 200)
+    assert _fires(FaultPlan(8, sites), "step", 200) != \
+        _fires(FaultPlan(7, sites), "step", 200)
+
+
+def test_sites_draw_independent_streams():
+    """Visiting one site must never perturb another site's schedule."""
+    only_step = _fires(FaultPlan(3, {"step": 0.4}), "step", 100)
+    mixed = FaultPlan(3, {"step": 0.4, "ckpt_restore": 0.9})
+    got = []
+    for k in range(100):
+        mixed.fire("ckpt_restore")     # interleaved traffic on another site
+        if k % 3 == 0:
+            mixed.fire("reshard")      # even an unconfigured site
+        got.append(mixed.fire("step"))
+    assert got == only_step
+
+
+def test_count_cap_and_after():
+    plan = FaultPlan(1, {"step": SiteSpec(prob=1.0, count=3, after=5)})
+    fired = _fires(plan, "step", 20)
+    assert sum(fired) == 3                      # capped
+    assert not any(fired[:5])                   # warmup visits skipped
+    assert fired[5:8] == [True, True, True]     # then prob=1 fires
+    assert plan.stats()["step"] == {"visits": 20, "fired": 3}
+
+
+def test_visit_raises_chaos_error_with_site_metadata():
+    plan = FaultPlan(0, {"ckpt_save": 1.0})
+    with pytest.raises(ChaosError, match="ckpt_save.*step 12"):
+        plan.visit("ckpt_save", step=12)
+    with pytest.raises(ValueError, match="unknown fault site"):
+        plan.visit("not_a_site")
+    with pytest.raises(ValueError, match="unknown fault site"):
+        FaultPlan(0, {"bogus": 1.0})
+
+
+def test_straggler_delay_stalls_instead_of_raising():
+    slept = []
+    plan = FaultPlan(0, {"straggler_delay": SiteSpec(prob=1.0,
+                                                     delay_s=0.25)},
+                     sleep_fn=slept.append)
+    plan.visit("straggler_delay", step=3)       # must NOT raise
+    assert slept == [0.25]
+
+
+def test_replay_reinjects_identical_faults():
+    plan = FaultPlan(11, {"step": 0.5})
+    first = _fires(plan, "step", 50)
+    assert _fires(plan.replay(), "step", 50) == first
+
+
+def test_from_spec_and_env(monkeypatch):
+    plan = FaultPlan.from_spec(
+        "seed=42, step=0.25, ckpt_save=0.5@2, straggler_delay=1.0, "
+        "delay=0.125")
+    assert plan.seed == 42
+    assert plan.sites["step"] == SiteSpec(prob=0.25)
+    assert plan.sites["ckpt_save"] == SiteSpec(prob=0.5, count=2)
+    assert plan.sites["straggler_delay"].delay_s == 0.125
+    with pytest.raises(ValueError, match="key=value"):
+        FaultPlan.from_spec("step:0.5")
+
+    monkeypatch.delenv(CHAOS_ENV, raising=False)
+    assert FaultPlan.from_env().sites == {}     # null plan
+    monkeypatch.setenv(CHAOS_ENV, "seed=9,step=1.0@1")
+    env_plan = FaultPlan.from_env()
+    assert env_plan.seed == 9 and env_plan.sites["step"].count == 1
+
+
+def test_env_hook_reaches_run_with_recovery(monkeypatch):
+    """chaos=None + REPRO_CHAOS set -> the run executes under faults."""
+    monkeypatch.setenv(CHAOS_ENV, "seed=5,step=1.0@2")
+    store = {}
+    res = run_with_recovery(
+        lambda s, x: x + 1, 0, 10,
+        FaultConfig(max_failures=10, checkpoint_every=2,
+                    backoff_base_s=0.0),
+        lambda s, x: store.__setitem__(s, x),
+        lambda: (max(store), store[max(store)]) if store else None)
+    assert res.steps_done == 10 and res.failures == 2
+    assert store[10] == 10                      # determinism survived
+
+
+# ---------------------------------------------------------------------------
+# The seeded chaos matrix: >= 5 seeds x faults at every recovery-loop site,
+# final model state + live AtomicTable bit-equal to the fault-free run
+# ---------------------------------------------------------------------------
+
+N_STEPS = 20
+M_SLOTS = 16
+
+
+def _step_fn(step, state):
+    """Deterministic per (step, state): an FAA batch against a live table
+    plus a fetched-sum accumulator (so fetched values are load-bearing)."""
+    table, acc = state
+    idx = jnp.asarray((np.arange(8) * (step + 3)) % M_SLOTS, jnp.int32)
+    vals = jnp.asarray(np.arange(8) + step, jnp.int32)
+    res = atomics.execute(table, atomics.Faa(idx, vals))
+    return res.table, acc + jnp.sum(res.fetched)
+
+
+def _run(tmp_path, tag, chaos):
+    ckpt_dir = str(tmp_path / tag)
+    table0 = atomics.AtomicTable(jnp.zeros((M_SLOTS,), jnp.int32))
+    init = (table0, jnp.int32(0))
+    like = {"table": table0, "acc": jnp.int32(0)}
+
+    def save_fn(step, state):
+        ckpt.save(ckpt_dir, step, {"table": state[0], "acc": state[1]})
+
+    def restore_fn():
+        got = ckpt.restore_latest_valid(ckpt_dir, like)
+        if got is None:
+            return None
+        step, tree, _ = got
+        return step, (tree["table"], tree["acc"])
+
+    from repro.runtime.elastic import reshard_tables
+    cfg = FaultConfig(max_failures=60, checkpoint_every=5,
+                      backoff_base_s=0.0)
+    return run_with_recovery(_step_fn, init, N_STEPS, cfg, save_fn,
+                             restore_fn, chaos=chaos,
+                             reshard_fn=lambda s: reshard_tables(s, None))
+
+
+def test_chaos_matrix_bit_equal_to_fault_free(tmp_path):
+    baseline = _run(tmp_path, "baseline", FaultPlan.null())
+    assert baseline.failures == 0
+    base_final = ckpt.restore_latest_valid(
+        str(tmp_path / "baseline"),
+        {"table": atomics.AtomicTable(jnp.zeros((M_SLOTS,), jnp.int32)),
+         "acc": jnp.int32(0)})
+    assert base_final[0] == N_STEPS
+    base_table = np.asarray(base_final[1]["table"].data)
+    base_acc = int(base_final[1]["acc"])
+    assert base_table.any()                      # the workload did work
+
+    sites = {"step": SiteSpec(prob=0.25, count=2),
+             "ckpt_save": SiteSpec(prob=0.25, count=2),
+             "ckpt_restore": SiteSpec(prob=0.25, count=2),
+             "reshard": SiteSpec(prob=0.25, count=2),
+             "straggler_delay": SiteSpec(prob=0.2, count=2, delay_s=1e-4)}
+    total_fired = 0
+    any_restored = False
+    for seed in range(1, 6):                     # the >= 5-seed matrix
+        plan = FaultPlan(seed, sites)
+        res = _run(tmp_path, f"seed{seed}", plan)
+        assert res.steps_done == N_STEPS
+        total_fired += plan.total_fired
+        any_restored |= bool(res.restored_from)
+        final = ckpt.restore_latest_valid(
+            str(tmp_path / f"seed{seed}"),
+            {"table": atomics.AtomicTable(jnp.zeros((M_SLOTS,), jnp.int32)),
+             "acc": jnp.int32(0)})
+        assert final[0] == N_STEPS
+        np.testing.assert_array_equal(
+            np.asarray(final[1]["table"].data), base_table,
+            err_msg=f"seed {seed}: live table diverged from fault-free run")
+        assert int(final[1]["acc"]) == base_acc, \
+            f"seed {seed}: fetched-sum accumulator diverged"
+    assert total_fired >= 5                      # the storm actually blew
+    assert any_restored                          # and recovery restored
+
+
+def test_chaos_all_sites_are_wired():
+    """Every named site is visited by run_with_recovery: prob=1@1 at each
+    site (one at a time) must produce exactly one absorbed failure (or one
+    stall for straggler_delay)."""
+    for site in SITES:
+        plan = FaultPlan(0, {site: SiteSpec(prob=1.0, count=1,
+                                            delay_s=1e-4)})
+        # a pre-existing checkpoint so startup takes the restore+adopt
+        # path (the reshard site is only visited when state is adopted)
+        store = {2: 2}
+        res = run_with_recovery(
+            lambda s, x: x + 1, 0, 6,
+            FaultConfig(max_failures=5, checkpoint_every=2,
+                        backoff_base_s=0.0),
+            lambda s, x: store.__setitem__(s, x),
+            lambda: (max(store), store[max(store)]) if store else None,
+            reshard_fn=lambda s: s, chaos=plan)
+        assert res.steps_done == 6
+        expect_failures = 0 if site == "straggler_delay" else 1
+        assert res.failures == expect_failures, site
+        assert plan.total_fired == 1, site
+        assert store[6] == 6, site

@@ -72,3 +72,120 @@ def test_reshard_on_load_hook(tmp_path):
     assert len(placed) == len(jax.tree.leaves(t))
     for leaf in jax.tree.leaves(restored):
         assert leaf.device == jax.devices()[0]
+
+
+# ---------------------------------------------------------------------------
+# Integrity hardening: checksums, corrupt-checkpoint fallback, tolerant gc
+# ---------------------------------------------------------------------------
+
+def _corrupt_payload(tmp_path, step, needle):
+    """Flip a byte inside the actual array payload of arrays.npz (NOT the
+    zip structure padding, which is genuinely meaningless)."""
+    p = tmp_path / f"step-{step:08d}" / "arrays.npz"
+    b = bytearray(p.read_bytes())
+    at = b.find(needle)
+    assert at >= 0, "payload bytes not found — test setup broken"
+    b[at] ^= 0xFF
+    p.write_bytes(bytes(b))
+
+
+def test_corrupt_payload_detected(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 3, t)
+    assert ckpt.validate_step(str(tmp_path), 3)
+    _corrupt_payload(tmp_path, 3, np.arange(5, dtype=np.int32).tobytes())
+    assert not ckpt.validate_step(str(tmp_path), 3)
+    with pytest.raises(ckpt.CheckpointCorruptError):
+        ckpt.restore(str(tmp_path), 3, t)
+
+
+def test_truncated_npz_detected(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 1, t)
+    p = tmp_path / "step-00000001" / "arrays.npz"
+    p.write_bytes(p.read_bytes()[: p.stat().st_size // 2])
+    with pytest.raises(ckpt.CheckpointCorruptError, match="arrays.npz"):
+        ckpt.restore(str(tmp_path), 1, t)
+
+
+def test_sha256_catches_valid_zip_wrong_bytes(tmp_path):
+    """Rewrite arrays.npz wholesale with *valid* (but wrong) arrays: the
+    zip CRC is clean, only the manifest sha256 can catch it — and
+    validate=False is the explicit escape hatch."""
+    t = _tree()
+    ckpt.save(str(tmp_path), 2, t)
+    path = tmp_path / "step-00000002"
+    with np.load(path / "arrays.npz") as npz:
+        zeroed = {k: np.zeros_like(npz[k]) for k in npz.files}
+    np.savez(path / "arrays.npz", **zeroed)
+    with pytest.raises(ckpt.CheckpointCorruptError, match="sha256"):
+        ckpt.restore(str(tmp_path), 2, t)
+    restored, _ = ckpt.restore(str(tmp_path), 2, t, validate=False)
+    assert float(np.abs(np.asarray(restored["a"])).sum()) == 0.0
+
+
+def test_checksum_less_manifest_still_restores(tmp_path):
+    """Pre-hardening checkpoints (no "checksums" key) restore cleanly."""
+    import json
+    t = _tree()
+    ckpt.save(str(tmp_path), 5, t)
+    mpath = tmp_path / "step-00000005" / "manifest.json"
+    m = json.loads(mpath.read_text())
+    del m["checksums"]
+    mpath.write_text(json.dumps(m))
+    assert ckpt.validate_step(str(tmp_path), 5)
+    restored, _ = ckpt.restore(str(tmp_path), 5, t)
+    np.testing.assert_array_equal(np.asarray(restored["b"]["c"]),
+                                  np.arange(5, dtype=np.int32))
+
+
+def test_restore_latest_valid_walks_back(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4):
+        ckpt.save(str(tmp_path), s, _tree(s))
+    # newest: torn npz; next: manifest gone (skipped by list_steps)
+    p4 = tmp_path / "step-00000004" / "arrays.npz"
+    p4.write_bytes(p4.read_bytes()[:64])
+    os.remove(tmp_path / "step-00000003" / "manifest.json")
+    got = ckpt.restore_latest_valid(str(tmp_path), t)
+    assert got is not None
+    step, tree, _extra = got
+    assert step == 2
+    np.testing.assert_array_equal(np.asarray(tree["a"]),
+                                  np.asarray(_tree(2)["a"]))
+    # the corrupt steps are kept on disk as post-mortem evidence
+    assert (tmp_path / "step-00000004").is_dir()
+
+
+def test_restore_latest_valid_none_when_nothing_restores(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 1, t)
+    p = tmp_path / "step-00000001" / "arrays.npz"
+    p.write_bytes(b"not a zip")
+    assert ckpt.restore_latest_valid(str(tmp_path), t) is None
+    assert ckpt.restore_latest_valid(str(tmp_path / "missing"), t) is None
+
+
+def test_list_steps_tolerates_mangled_entries(tmp_path):
+    ckpt.save(str(tmp_path), 7, _tree())
+    os.makedirs(tmp_path / "step-garbage")          # non-integer suffix
+    os.makedirs(tmp_path / "step-00000009")         # manifest-less dir
+    assert ckpt.list_steps(str(tmp_path)) == [7]
+    assert ckpt.latest_step(str(tmp_path)) == 7
+
+
+def test_gc_never_drops_newest_valid_step(tmp_path):
+    """Corrupt every step inside the keep window: gc must still preserve
+    the newest step that validates, even though it fell outside keep=2."""
+    for s in range(5):
+        ckpt.save(str(tmp_path), s, _tree(s))
+    for s in (3, 4):
+        p = tmp_path / f"step-{s:08d}" / "arrays.npz"
+        p.write_bytes(p.read_bytes()[:64])
+    saver = ckpt.AsyncCheckpointer(str(tmp_path), keep=2)
+    saver.gc()
+    steps = ckpt.list_steps(str(tmp_path))
+    assert 2 in steps                                # newest valid survives
+    assert steps == [2, 3, 4]                        # keep window + survivor
+    got = ckpt.restore_latest_valid(str(tmp_path), _tree())
+    assert got is not None and got[0] == 2

@@ -82,3 +82,114 @@ def test_straggler_monitor_quiet_when_uniform():
         for h in range(3):
             mon.record(h, 1.0)
     assert mon.flag() == []
+
+
+# ---------------------------------------------------------------------------
+# Recovery pacing: real backoff, deadline budget, fatal classification
+# ---------------------------------------------------------------------------
+
+import logging
+
+from repro.runtime.fault_tolerance import FatalFault, backoff_delay
+
+
+def _crashing_injector(steps):
+    budget = dict(steps)
+
+    def injector(step):
+        if budget.get(step):
+            budget[step] -= 1
+            raise RuntimeError(f"chip lost at {step}")
+    return injector
+
+
+def test_backoff_delay_is_pure_capped_exponential():
+    cfg = FaultConfig(backoff_base_s=0.01, backoff_factor=2.0,
+                      backoff_max_s=0.05, backoff_jitter=0.0)
+    delays = [backoff_delay(cfg, k) for k in (1, 2, 3, 4, 5)]
+    assert delays == [0.01, 0.02, 0.04, 0.05, 0.05]   # doubles then caps
+    jittered = FaultConfig(backoff_base_s=0.01, backoff_jitter=0.5)
+    a = [backoff_delay(jittered, k) for k in range(1, 6)]
+    assert a == [backoff_delay(jittered, k) for k in range(1, 6)]  # pure
+    assert all(d >= 0.0 for d in a)
+
+
+def test_recovery_sleeps_the_backoff_and_logs_it(caplog):
+    store = Store()
+    slept = []
+    cfg = FaultConfig(max_failures=5, checkpoint_every=5,
+                      backoff_base_s=0.01, backoff_factor=2.0,
+                      backoff_jitter=0.0)
+    with caplog.at_level(logging.INFO, logger="repro.runtime"):
+        res = run_with_recovery(
+            lambda s, x: x + 1, 0, 20, cfg, store.save, store.restore,
+            failure_injector=_crashing_injector({4: 1, 9: 1}),
+            sleep_fn=slept.append)
+    assert res.steps_done == 20 and res.failures == 2
+    assert slept == [0.01, 0.02]                   # grows per failure
+    assert res.backoff_total_s == pytest.approx(sum(slept))
+    assert sum("recovery backoff: sleeping" in r.message
+               for r in caplog.records) == 2
+
+
+def test_deadline_budget_raises_timeout():
+    store = Store()
+    cfg = FaultConfig(max_failures=100, checkpoint_every=5,
+                      backoff_base_s=0.0, deadline_s=0.0)
+    with pytest.raises(TimeoutError, match="recovery deadline"):
+        run_with_recovery(
+            lambda s, x: x + 1, 0, 20, cfg, store.save, store.restore,
+            failure_injector=_crashing_injector({4: 1}),
+            sleep_fn=lambda d: None)
+
+
+def test_fatal_fault_never_retried():
+    store = Store()
+    calls = []
+
+    def injector(step):
+        calls.append(step)
+        raise FatalFault("operator abort")
+
+    cfg = FaultConfig(max_failures=100, checkpoint_every=5)
+    with pytest.raises(FatalFault):
+        run_with_recovery(lambda s, x: x + 1, 0, 20, cfg, store.save,
+                          store.restore, failure_injector=injector,
+                          sleep_fn=lambda d: None)
+    assert calls == [0]                            # exactly one attempt
+
+
+def test_fatal_types_config_never_retried():
+    store = Store()
+
+    def injector(step):
+        raise ValueError("misconfiguration")
+
+    cfg = FaultConfig(max_failures=100, checkpoint_every=5,
+                      fatal_types=(ValueError,))
+    with pytest.raises(ValueError, match="misconfiguration"):
+        run_with_recovery(lambda s, x: x + 1, 0, 20, cfg, store.save,
+                          store.restore, failure_injector=injector,
+                          sleep_fn=lambda d: None)
+
+
+def test_flaky_restore_is_retried():
+    """A failure during restore itself is retryable, not run-fatal."""
+    store = Store()
+    store.save(10, 10)
+    flaky = {"left": 2}
+    real_restore = store.restore
+
+    def restore():
+        if flaky["left"]:
+            flaky["left"] -= 1
+            raise OSError("ckpt server hiccup")
+        return real_restore()
+
+    cfg = FaultConfig(max_failures=5, checkpoint_every=100,
+                      backoff_base_s=0.0)
+    res = run_with_recovery(lambda s, x: x + 1, 0, 15, cfg, store.save,
+                            restore, sleep_fn=lambda d: None)
+    assert res.steps_done == 15 and res.failures == 2
+    assert res.restored_from == [10]
+    assert store.ckpts[15] == 15
