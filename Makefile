@@ -2,8 +2,9 @@ PYTHON ?= python
 # src for the repro package, repo root for the benchmarks package
 export PYTHONPATH := src:.:$(PYTHONPATH)
 
-.PHONY: test test-tier1 test-deprecations test-chaos smoke bench-rmw \
-        bench-rmw-sharded bench-atomics bench-reshard calibrate
+.PHONY: test test-tier1 test-deprecations test-chaos test-telemetry smoke \
+        bench-rmw bench-rmw-sharded bench-atomics bench-reshard calibrate \
+        bench-telemetry
 
 # Tier-1 gate + benchmark smoke (what CI runs).
 test: test-tier1 smoke
@@ -42,14 +43,31 @@ test-chaos:
 	assert res.failures == 2 and res.steps_done == 12, res;\
 	print('REPRO_CHAOS hook ok:', res)"
 
+# Telemetry lane: stream mechanics + sinks, the jit discipline (events at
+# trace/dispatch boundaries only — no duplicates across cached executions,
+# one decision event per sharded call site on 8 fake devices), drift
+# aggregation math, and the recovery-trace events.
+test-telemetry:
+	$(PYTHON) -m pytest -q tests/test_telemetry.py \
+	  tests/test_fault_tolerance.py
+
+# Where `make smoke` drops its instrumented capture (JSONL, overwritten).
+SMOKE_TRACE ?= /tmp/repro_smoke_trace.jsonl
+
 # Fast benchmark smoke: latency + bandwidth + the sharded-RMW exchange +
-# the elastic-migration paths + the fault-recovery/bounded-retry gates
-# (exercises the serialized oracle, the combining path, the Pallas kernel,
-# the 8-fake-device distributed protocol, both reshard paths, and the
-# chaos-driven recovery loop end to end).
+# the elastic-migration paths + the fault-recovery/bounded-retry gates +
+# the telemetry drift/overhead gates (exercises the serialized oracle, the
+# combining path, the Pallas kernel, the 8-fake-device distributed
+# protocol, both reshard paths, and the chaos-driven recovery loop end to
+# end).  The second pass re-runs the latency suite with the telemetry
+# stream capturing to $(SMOKE_TRACE) and renders the drift report from
+# the captured events — the full observability loop in one make target.
 smoke:
 	$(PYTHON) benchmarks/run.py --fast \
-	  --only latency,bandwidth,rmw_sharded,reshard,fault_recovery
+	  --only latency,bandwidth,rmw_sharded,reshard,fault_recovery,telemetry_drift
+	REPRO_TELEMETRY=$(SMOKE_TRACE) $(PYTHON) benchmarks/run.py --fast \
+	  --only latency
+	$(PYTHON) -m repro.telemetry.report $(SMOKE_TRACE)
 
 # Full RMW backend shoot-out; rewrites benchmarks/results/rmw_backends.json.
 bench-rmw:
@@ -69,6 +87,11 @@ bench-atomics:
 # in-collective exchange vs host roundtrip; rewrites results/reshard.json.
 bench-reshard:
 	$(PYTHON) benchmarks/run.py --only reshard
+
+# Telemetry drift + overhead gates, full grid; rewrites
+# benchmarks/results/telemetry_drift.json.
+bench-telemetry:
+	$(PYTHON) benchmarks/run.py --only telemetry_drift
 
 # Fit + persist the container HardwareSpec (results/calibrated_spec.json).
 calibrate:

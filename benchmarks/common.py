@@ -2,31 +2,36 @@
 
 Phases per benchmark: preparation (allocate + warm: the jit compile also
 plays the TLB-warm role), synchronization (block_until_ready), measurement
-(perf_counter_ns around the blocked call), result collection (median of k).
+(`telemetry.span` around the blocked call — the ONE clock the production
+paths and the benchmark suites share), result collection (median of k).
+When the telemetry stream is enabled each rep also lands in it as a
+``bench.rep`` event, so a captured benchmark run feeds the same drift
+report as production traffic.
 """
 
 from __future__ import annotations
 
-import time
 from typing import Callable, Dict, List
 
 import jax
 import numpy as np
+
+from repro import telemetry
 
 WARMUP = 2
 REPS = 5
 
 
 def time_s(fn: Callable[[], object], reps: int = REPS,
-           warmup: int = WARMUP) -> float:
+           warmup: int = WARMUP, name: str = "bench.rep") -> float:
     """Median wall seconds of fn() (each call fully blocked)."""
     for _ in range(warmup):
         jax.block_until_ready(fn())
     out: List[float] = []
-    for _ in range(reps):
-        t0 = time.perf_counter_ns()
-        jax.block_until_ready(fn())
-        out.append((time.perf_counter_ns() - t0) / 1e9)
+    for rep in range(reps):
+        with telemetry.span(name, rep=rep) as sp:
+            jax.block_until_ready(fn())
+        out.append(sp.wall_s)
     return float(np.median(out))
 
 

@@ -34,7 +34,6 @@ import shutil
 import subprocess
 import sys
 import tempfile
-import time
 from typing import Dict
 
 import jax
@@ -42,6 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import Csv
+from repro import telemetry
 
 RESULT_PATH = os.path.join(os.path.dirname(__file__), "results",
                            "fault_recovery.json")
@@ -49,7 +49,7 @@ RESULT_PATH = os.path.join(os.path.dirname(__file__), "results",
 _SHARDED_SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import json, time
+import json
 import jax, jax.numpy as jnp
 import numpy as np
 from repro import atomics
@@ -72,10 +72,11 @@ def make_ops(slots, observed):
     return Cas(jnp.asarray(slots), jnp.asarray(observed) + 1,
                expected=jnp.asarray(observed))
 
+from repro import telemetry
 res = execute_until(make_table(), make_ops, max_rounds=n)  # warm compile
-t0 = time.perf_counter_ns()
-res = execute_until(make_table(), make_ops, max_rounds=n)
-dt = (time.perf_counter_ns() - t0) / 1e9
+with telemetry.span("bench.retry.sharded", n=n) as sp:
+    res = execute_until(make_table(), make_ops, max_rounds=n)
+dt = sp.wall_s
 out = {"n": n, "n_rounds": int(res.n_rounds),
        "pending": int(res.pending.size),
        "attempts": int(res.rounds.sum()),
@@ -127,15 +128,16 @@ def _recovery_grid(csv: Csv, fast: bool) -> list:
                 FaultPlan(7, {"step": SiteSpec(prob=prob, count=6)}))
         cfg = FaultConfig(max_failures=20, checkpoint_every=5,
                           backoff_base_s=0.0)
-        t0 = time.perf_counter_ns()
-        res = run_with_recovery(
-            step_fn,
-            (atomics.AtomicTable(jnp.zeros((m,), jnp.int32)), jnp.int32(0)),
-            n_steps, cfg,
-            lambda s, st: ckpt.save(ckpt_dir, s,
-                                    {"table": st[0], "acc": st[1]}),
-            restore_fn, chaos=plan, sleep_fn=lambda d: None)
-        dt = (time.perf_counter_ns() - t0) / 1e9
+        with telemetry.span("bench.recovery", prob=prob) as sp:
+            res = run_with_recovery(
+                step_fn,
+                (atomics.AtomicTable(jnp.zeros((m,), jnp.int32)),
+                 jnp.int32(0)),
+                n_steps, cfg,
+                lambda s, st: ckpt.save(ckpt_dir, s,
+                                        {"table": st[0], "acc": st[1]}),
+                restore_fn, chaos=plan, sleep_fn=lambda d: None)
+        dt = sp.wall_s
         final = restore_fn()
         return {"prob": prob, "seconds": dt, "failures": res.failures,
                 "restored_from": res.restored_from,
@@ -180,10 +182,11 @@ def _retry_grid(csv: Csv, fast: bool) -> list:
         for pol in policies:
             budget = n if pol != "shrink" else 8 * n
             t = atomics.AtomicTable(jnp.zeros((8,), jnp.int32))
-            t0 = time.perf_counter_ns()
-            res = execute_until(t, _contended_make_ops(n), max_rounds=budget,
-                                policy=pol, sleep_fn=lambda d: None)
-            dt = (time.perf_counter_ns() - t0) / 1e9
+            with telemetry.span("bench.retry", policy=pol, n=n) as sp:
+                res = execute_until(t, _contended_make_ops(n),
+                                    max_rounds=budget, policy=pol,
+                                    sleep_fn=lambda d: None)
+            dt = sp.wall_s
             assert res.pending.size == 0, f"{pol}/n{n}: unresolved ops"
             assert int(np.asarray(res.table.data)[0]) == n
             if pol != "shrink":      # the <= n acceptance bound
@@ -215,14 +218,14 @@ def _sharded_row(csv: Csv, fast: bool) -> Dict:
             jnp.zeros((32,), jnp.int32),
             jax.sharding.NamedSharding(mesh,
                                        jax.sharding.PartitionSpec("dev")))
-        t0 = time.perf_counter_ns()
-        res = execute_until(atomics.AtomicTable(data, axis="dev"),
-                            _contended_make_ops(n), max_rounds=n)
+        with telemetry.span("bench.retry.sharded", n=n) as sp:
+            res = execute_until(atomics.AtomicTable(data, axis="dev"),
+                                _contended_make_ops(n), max_rounds=n)
         out = {"n": n, "n_rounds": int(res.n_rounds),
                "pending": int(res.pending.size),
                "attempts": int(res.rounds.sum()),
                "final": int(np.asarray(res.table.data)[0]),
-               "seconds": (time.perf_counter_ns() - t0) / 1e9,
+               "seconds": sp.wall_s,
                "mesh": "1-device (fast)"}
     else:
         env = dict(os.environ)

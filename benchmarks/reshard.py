@@ -52,10 +52,11 @@ GATE_SLOTS = 1 << 16
 SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-import json, time
+import json
 import jax, jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from benchmarks.common import time_s
 from repro import atomics
 from repro.atomics import reshard
 from repro.atomics.layout import TableLayout
@@ -72,15 +73,10 @@ N_BATCHES = 4
 N_PER_DEV = 1024 if FAST else 4096
 GRID_M = (4096,) if FAST else (4096, 65536, 262144)
 
-def median_time(fn, reps=5, warmup=1):
-    for _ in range(warmup):
-        jax.block_until_ready(fn())
-    out = []
-    for _ in range(reps):
-        t0 = time.perf_counter_ns()
-        jax.block_until_ready(fn())
-        out.append((time.perf_counter_ns() - t0) / 1e9)
-    return float(np.median(out))
+def median_time(fn):
+    # the shared benchmark clock (telemetry.span under the hood); warmup=1
+    # keeps this suite's historical rep budget
+    return time_s(fn, warmup=1, name="bench.reshard.rep")
 
 _STEPS = {}
 

@@ -27,6 +27,11 @@ Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.Csv).
                                                 on local and sharded tiers;
                                                 emits results/
                                                 fault_recovery.json)
+  telemetry_drift   Cost-model drift           (instrumented traffic across
+                                                all three selector tiers +
+                                                <5% enabled-stream overhead
+                                                gate; emits results/
+                                                telemetry_drift.json)
 """
 
 from __future__ import annotations
@@ -47,8 +52,14 @@ def main() -> None:
                             fault_recovery, latency, model_validation,
                             operand_size, operands_fetched, prefetcher,
                             reshard, rmw_backends, rmw_sharded, roofline,
-                            unaligned)
+                            telemetry_drift, unaligned)
     from benchmarks.common import Csv
+    from repro import telemetry
+
+    # REPRO_TELEMETRY=<path.jsonl|ring> captures the whole run — every
+    # bench.rep span plus the instrumented production-path events — for
+    # `python -m repro.telemetry.report`
+    telemetry.enable_from_env()
 
     suite = {
         "latency": lambda c: latency.run(c, n_ops=512 if args.fast else 2048),
@@ -64,6 +75,7 @@ def main() -> None:
         "reshard": lambda c: reshard.run(c, fast=args.fast),
         "calibrate": lambda c: calibrate.run(c, fast=args.fast),
         "fault_recovery": lambda c: fault_recovery.run(c, fast=args.fast),
+        "telemetry_drift": lambda c: telemetry_drift.run(c, fast=args.fast),
         "model_validation": model_validation.run,
         "roofline": roofline.run,
     }
@@ -86,6 +98,7 @@ def main() -> None:
         except Exception as e:  # noqa: BLE001
             failures.append((name, repr(e)))
             print(f"{name},FAILED,{e!r}", flush=True)
+    telemetry.disable()              # flush a REPRO_TELEMETRY capture
     if failures:
         sys.exit(1)
 

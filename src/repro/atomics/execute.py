@@ -27,10 +27,14 @@ arrival-order contract).
 
 from __future__ import annotations
 
+import time
 from typing import Any, NamedTuple, Optional, Sequence, Tuple, Union
 
 import jax
+import jax.numpy as jnp
 
+from repro import telemetry
+from repro.telemetry import core as _tcore
 from repro.atomics.ops import AtomicOp
 from repro.atomics.table import AtomicTable
 from repro.core import rmw as rmw_mod
@@ -73,9 +77,9 @@ def _axes_bound(names: Tuple[str, ...]) -> bool:
         return False
 
 
-def _execute_one(table: AtomicTable, op: AtomicOp, *, need_fetched: bool,
-                 backend: str, strategy: str, spec,
-                 distinct_slots: Optional[int], reverse_ranks: bool):
+def _dispatch_one(table: AtomicTable, op: AtomicOp, *, need_fetched: bool,
+                  backend: str, strategy: str, spec,
+                  distinct_slots: Optional[int], reverse_ranks: bool):
     if not isinstance(op, AtomicOp):
         raise TypeError(
             f"ops must be atomics.Faa/Swp/Min/Max/Cas instances, "
@@ -120,6 +124,175 @@ def _execute_one(table: AtomicTable, op: AtomicOp, *, need_fetched: bool,
             table.data, op.indices, op.values, op.kind, op.expected,
             backend=backend, spec=spec, need_fetched=need_fetched)
     return table.with_data(res.table), res.fetched, res.success
+
+
+# ---------------------------------------------------------------------------
+# Telemetry: one decision event per executed op batch
+# ---------------------------------------------------------------------------
+
+#: prebound — ``jax.core.Tracer`` goes through the deprecation-module
+#: ``__getattr__`` on every lookup, measurable on the eager hot path
+_TRACER = jax.core.Tracer
+
+
+def _decision_fields(table: AtomicTable, op: AtomicOp, *, need_fetched: bool,
+                     backend: str, strategy: str, spec,
+                     distinct_slots: Optional[int]) -> dict:
+    """Mirror the dispatch ladder's selection (same deterministic inputs ->
+    same choice) into one flat event record: tier, choice, and the
+    selector's predicted cost — the prediction half of the drift tracker.
+    Never raises: a selection that cannot be priced records ``None``."""
+    n = int(op.indices.shape[0])
+    perop_cas = op.kind == "cas" and op.expected is not None \
+        and jnp.ndim(op.expected) != 0
+    fields = dict(op=op.kind, n=n, need_fetched=need_fetched,
+                  distinct_slots=distinct_slots)
+    try:
+        if table.is_sharded:
+            from repro.core import rmw_sharded as rs
+            shard_axes = rs._axes_tuple(table.axis)
+            sizes = [rs._axis_size(a) for a in shard_axes]
+            m_global = int(table.data.shape[0]) * _prod(sizes)
+            fields.update(tier="sharded", m=m_global,
+                          n_shards=_prod(sizes), backend=backend)
+            if perop_cas:
+                # un-combined owner-oracle path: strategy does not apply
+                # and the exchange cost model declines to price it
+                fields.update(strategy="perop_oracle", predicted_s=None)
+            elif strategy == "auto":
+                n_rep = rs._axis_size(table.replica_axes) \
+                    if table.replica_axes else 1
+                sel = rs.select_exchange_with_cost(
+                    op.kind, n, m_global,
+                    rs._mesh_axes(shard_axes, sizes, None), spec=spec,
+                    need_fetched=need_fetched, uniform_expected=True,
+                    replicas=n_rep, distinct_slots=distinct_slots)
+                fields.update(strategy=sel.choice,
+                              predicted_s=sel.predicted_s)
+            else:
+                used = strategy
+                if strategy == "hierarchical" and len(shard_axes) < 2:
+                    used = "oneshot"    # the executor's documented demotion
+                fields.update(strategy=used, predicted_s=rs.EXCHANGE_COSTS[
+                    used](spec or rmw_engine.default_spec(), op.kind, n,
+                          m_global, rs._mesh_axes(shard_axes, sizes, None),
+                          need_fetched, distinct_slots=distinct_slots))
+        else:
+            m = int(table.data.shape[0])
+            fields.update(tier="local", m=m, strategy=None)
+            uniform = not perop_cas
+            if backend == "auto":
+                sel = rmw_engine.select_backend_with_cost(
+                    op.kind, n, m, spec, uniform_expected=uniform,
+                    dtype=table.dtype, need_fetched=need_fetched)
+                fields.update(backend=sel.choice, predicted_s=sel.predicted_s)
+            else:
+                b = rmw_engine.BACKENDS.get(backend)
+                fields.update(backend=backend, predicted_s=(
+                    b.cost(spec or rmw_engine.default_spec(), op.kind, n, m,
+                           need_fetched) if b is not None else None))
+    except Exception:  # noqa: BLE001 — observability must not break dispatch
+        fields.setdefault("tier", "sharded" if table.is_sharded else "local")
+        fields.setdefault("predicted_s", None)
+    return fields
+
+
+def _prod(xs) -> int:
+    out = 1
+    for x in xs:
+        out *= int(x)
+    return out
+
+
+#: decision fields are a pure function of (kind, n, m, backend, ...) — on
+#: the local tier the same shapes recur every step, so the eager hot path
+#: pays one dict lookup instead of re-running the cost model per call (the
+#: <5% instrumentation-overhead budget).  Sharded fields stay uncached:
+#: they are computed at trace time only, and axis sizes are trace-scoped.
+_DECISION_CACHE: dict = {}
+_DECISION_CACHE_MAX = 1024
+
+
+def _execute_one(table: AtomicTable, op: AtomicOp, *, need_fetched: bool,
+                 backend: str, strategy: str, spec,
+                 distinct_slots: Optional[int], reverse_ranks: bool):
+    if not telemetry.enabled():
+        return _dispatch_one(table, op, need_fetched=need_fetched,
+                             backend=backend, strategy=strategy, spec=spec,
+                             distinct_slots=distinct_slots,
+                             reverse_ranks=reverse_ranks)
+    if not isinstance(op, AtomicOp) or \
+            (table.is_sharded and not _axes_bound(_axis_names(table))):
+        # let the dispatcher raise its guidance errors un-instrumented
+        return _dispatch_one(table, op, need_fetched=need_fetched,
+                             backend=backend, strategy=strategy, spec=spec,
+                             distinct_slots=distinct_slots,
+                             reverse_ranks=reverse_ranks)
+    data = table.data
+    if table.is_sharded:
+        # trace-time only (axis sizes are trace-scoped): never cached, and
+        # the one-per-compilation cost is invisible
+        fields = _decision_fields(table, op, need_fetched=need_fetched,
+                                  backend=backend, strategy=strategy,
+                                  spec=spec, distinct_slots=distinct_slots)
+        fields["event"] = "atomics.execute"
+    else:
+        # inlined cache lookup — on the eager hot path the function-call
+        # and kwargs overhead of a helper is itself a measurable slice of
+        # the <5% instrumentation budget.  NB the raw dtype object in the
+        # key: hashable, where str(dtype) costs ~10us/call.
+        perop = op.kind == "cas" and op.expected is not None \
+            and jnp.ndim(op.expected) != 0
+        key = (op.kind, op.indices.shape[0], data.shape[0], backend,
+               strategy, need_fetched, perop, id(spec), distinct_slots,
+               data.dtype)
+        fields = _DECISION_CACHE.get(key)
+        if fields is None:
+            fields = _decision_fields(
+                table, op, need_fetched=need_fetched, backend=backend,
+                strategy=strategy, spec=spec, distinct_slots=distinct_slots)
+            fields["event"] = "atomics.execute"   # pre-stamped template
+            if len(_DECISION_CACHE) >= _DECISION_CACHE_MAX:
+                _DECISION_CACHE.clear()
+            _DECISION_CACHE[key] = fields
+        fields = dict(fields)        # the cached template stays pristine
+    traced = isinstance(data, _TRACER) or isinstance(op.indices, _TRACER)
+    # _tcore flag reads instead of the telemetry.*_enabled() accessors:
+    # each saved call is ~0.15us against the overhead budget
+    if traced or not _tcore._sync:
+        if _tcore._annotate and not traced:
+            with telemetry.annotation(
+                    f"atomics.execute/{fields.get('tier')}"):
+                out = _dispatch_one(table, op, need_fetched=need_fetched,
+                                    backend=backend, strategy=strategy,
+                                    spec=spec, distinct_slots=distinct_slots,
+                                    reverse_ranks=reverse_ranks)
+        else:
+            out = _dispatch_one(table, op, need_fetched=need_fetched,
+                                backend=backend, strategy=strategy,
+                                spec=spec, distinct_slots=distinct_slots,
+                                reverse_ranks=reverse_ranks)
+    else:
+        t0 = time.perf_counter()
+        if _tcore._annotate:
+            with telemetry.annotation(
+                    f"atomics.execute/{fields.get('tier')}"):
+                out = _dispatch_one(table, op, need_fetched=need_fetched,
+                                    backend=backend, strategy=strategy,
+                                    spec=spec, distinct_slots=distinct_slots,
+                                    reverse_ranks=reverse_ranks)
+        else:
+            out = _dispatch_one(table, op, need_fetched=need_fetched,
+                                backend=backend, strategy=strategy,
+                                spec=spec, distinct_slots=distinct_slots,
+                                reverse_ranks=reverse_ranks)
+        jax.block_until_ready((out[0].data, out[1], out[2]))
+        fields["measured_s"] = time.perf_counter() - t0
+    # the cache-copy dict becomes the event itself (record_event skips the
+    # kwargs rebuild that `record` pays — this is the hottest record site)
+    fields["traced"] = traced
+    telemetry.record_event(fields)
+    return out
 
 
 def execute(table: Union[AtomicTable, Array],

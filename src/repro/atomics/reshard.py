@@ -47,6 +47,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
+import time
 from typing import Dict, Optional, Tuple
 
 import jax
@@ -54,6 +55,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro import telemetry
 from repro.atomics.layout import TableLayout, norm_axes
 from repro.atomics.table import AtomicTable
 
@@ -369,7 +371,23 @@ def migrate(table: AtomicTable, dst_mesh, *, axis: object = "auto",
         dst = TableLayout(num_slots=src.num_slots, dtype=src.dtype)
     plan = plan_reshard(src, dst, dst_mesh=dst_mesh, src_mesh=src_mesh,
                         live=True, path=path, spec=spec)
-    return plan.execute(table)
+    if not telemetry.enabled():
+        return plan.execute(table)
+    with telemetry.annotation(f"atomics.reshard.migrate/{plan.path}"):
+        t0 = time.perf_counter()
+        out = plan.execute(table)
+        jax.block_until_ready(out.data)
+        dt = time.perf_counter() - t0
+    telemetry.record(
+        "atomics.reshard.migrate", path=plan.path,
+        tier="migration", n_slots=src.num_slots,
+        src_shards=src.n_shards, dst_shards=dst.n_shards,
+        src_replicas=src.n_replicas, dst_replicas=dst.n_replicas,
+        predicted_s=plan.predicted_s.get(plan.path),
+        predicted_all={k: v for k, v in plan.predicted_s.items()
+                       if math.isfinite(v)},
+        measured_s=dt)
+    return out
 
 
 def restore_table(host_data, *, like: Optional[AtomicTable] = None,

@@ -46,6 +46,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import telemetry
 from repro.atomics.ops import OP_KINDS, AtomicOp, Cas
 from repro.atomics.table import AtomicTable
 
@@ -251,9 +252,38 @@ def _exec_round_sharded(table: AtomicTable, kind: str, idx: np.ndarray,
     op_sh = NamedSharding(mesh, P(rep + axis))
     args = [jax.device_put(jnp.asarray(a), op_sh)
             for a in (idx_p, vals_p, exp_p)]
-    tab, fetched, success = fn(table.data, *args)
+    info = None
+    if telemetry.enabled():
+        # the prediction half of the round event: per-op CAS routes to the
+        # owner-oracle pass (unpriced); everything else is a combinable
+        # exchange the selector can price per strategy
+        info = {"tier": "sharded", "n_exec": per, "m": m,
+                "n_shards": n_dev // max(1, _rep_size(mesh, rep)),
+                "strategy": "perop_oracle", "predicted_s": None}
+        if kind != "cas":
+            try:
+                from repro.core import rmw_sharded as rs
+                sizes = [int(mesh.shape[a]) for a in axis]
+                sel = rs.select_exchange_with_cost(
+                    kind, per, m, rs._mesh_axes(axis, sizes, None),
+                    spec=spec, need_fetched=True,
+                    distinct_slots=distinct_slots) if strategy == "auto" \
+                    else None
+                if sel is not None:
+                    info.update(strategy=sel.choice,
+                                predicted_s=sel.predicted_s)
+                else:
+                    info.update(strategy=strategy)
+            except Exception:  # noqa: BLE001 — never break the round
+                pass
+    with telemetry.annotation("atomics.retry.exchange"):
+        tab, fetched, success = fn(table.data, *args)
     return (table.with_data(tab), np.asarray(fetched)[:k],
-            np.asarray(success)[:k].astype(bool))
+            np.asarray(success)[:k].astype(bool), info)
+
+
+def _rep_size(mesh, rep: Tuple[str, ...]) -> int:
+    return math.prod(int(mesh.shape[a]) for a in rep) if rep else 1
 
 
 def _exec_round(table: AtomicTable, kind: str, idx: np.ndarray,
@@ -269,9 +299,26 @@ def _exec_round(table: AtomicTable, kind: str, idx: np.ndarray,
                  expected=jnp.asarray(exp))
     else:
         op = OP_KINDS[kind](jnp.asarray(idx), jnp.asarray(vals))
+    info = None
+    if telemetry.enabled():
+        from repro.core import rmw_engine
+        m = int(table.data.shape[0])
+        info = {"tier": "local", "n_exec": len(idx), "m": m,
+                "strategy": None, "predicted_s": None}
+        try:
+            sel = rmw_engine.select_backend_with_cost(
+                kind, len(idx), m, spec,
+                uniform_expected=kind != "cas", dtype=table.dtype) \
+                if backend == "auto" else None
+            if sel is not None:
+                info.update(backend=sel.choice, predicted_s=sel.predicted_s)
+            else:
+                info.update(backend=backend)
+        except Exception:  # noqa: BLE001 — never break the round
+            pass
     res = execute(table, op, need_fetched=True, backend=backend, spec=spec)
     return (res.table, np.asarray(res.fetched),
-            np.asarray(res.success).astype(bool))
+            np.asarray(res.success).astype(bool), info)
 
 
 # ---------------------------------------------------------------------------
@@ -375,11 +422,23 @@ def execute_until(table: Union[AtomicTable, Array],
                     expected[pending] = observed[pending]
         k = max(1, min(pol.batch_size(len(pending), rnd), len(pending)))
         issue, defer = pending[:k], pending[k:]
-        table, fetched, ok = _exec_round(
+        t0 = time.perf_counter()
+        table, fetched, ok, info = _exec_round(
             table, kind, slots[issue], values[issue],
             expected[issue] if is_cas else None,
             backend=backend, strategy=strategy, spec=spec,
             distinct_slots=distinct_slots)
+        if info is not None:
+            # one event per retry round: the pending-count trajectory is
+            # the contention signal the ROADMAP's adaptive estimator needs,
+            # and (predicted_s, measured_s) feed the exchange-tier drift
+            # tracker (the round's fetched/success reads block, so the
+            # measured wall covers the full round dispatch+execute)
+            telemetry.record(
+                "atomics.retry.round", op=kind, policy=pol.name, round=rnd,
+                pending=len(pending), issued=int(k),
+                resolved=int(ok.sum()),
+                measured_s=time.perf_counter() - t0, **info)
         observed[issue] = fetched
         rounds[issue] += 1
         success[issue] = ok
@@ -389,6 +448,17 @@ def execute_until(table: Union[AtomicTable, Array],
         pending = np.concatenate([issue[~ok], defer])
         n_rounds += 1
 
+    if telemetry.enabled():
+        # rounds[i] = attempts op i took; bincount over it is the per-call
+        # contention histogram (index = attempt count, 0 = never issued)
+        hist = np.bincount(rounds.astype(np.int64),
+                           minlength=n_rounds + 1).tolist()
+        telemetry.record("atomics.retry.done", op=kind, policy=pol.name,
+                         n=n, n_rounds=n_rounds,
+                         tier="sharded" if table.is_sharded else "local",
+                         resolved=int(success.sum()),
+                         unresolved=int(len(pending)),
+                         attempts=int(rounds.sum()), round_histogram=hist)
     return RetryResult(table=table, fetched=observed, success=success,
                        rounds=rounds, n_rounds=n_rounds,
                        pending=np.sort(pending))

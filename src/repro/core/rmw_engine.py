@@ -47,7 +47,7 @@ from __future__ import annotations
 import dataclasses
 import math
 from functools import partial
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, NamedTuple, Optional
 
 import jax
 import jax.numpy as jnp
@@ -416,19 +416,40 @@ def default_spec() -> perf_model.HardwareSpec:
     return spec
 
 
+class Selection(NamedTuple):
+    """A selector decision plus its predicted-cost record — what the
+    telemetry layer persists so predicted-vs-measured drift can be
+    tracked per tier (`repro.telemetry.drift`)."""
+
+    choice: str                  # winning backend/strategy name
+    predicted_s: float           # its predicted cost (the model's claim)
+    costs: Dict[str, float]      # every candidate's prediction
+
+
+def select_backend_with_cost(op: str, n: int, m: int,
+                             spec: Optional[perf_model.HardwareSpec] = None,
+                             *, uniform_expected: bool = True, dtype=None,
+                             need_fetched: bool = True) -> Selection:
+    """`select_backend` returning the full predicted-cost record."""
+    if op not in OPS:
+        raise ValueError(f"unknown op {op!r}")
+    spec = spec or default_spec()
+    costs = {b.name: b.cost(spec, op, n, m, need_fetched)
+             for b in BACKENDS.values()
+             if b.supports(op, uniform_expected=uniform_expected,
+                           dtype=dtype)}
+    choice = min(costs, key=costs.get)
+    return Selection(choice, costs[choice], costs)
+
+
 def select_backend(op: str, n: int, m: int,
                    spec: Optional[perf_model.HardwareSpec] = None, *,
                    uniform_expected: bool = True, dtype=None,
                    need_fetched: bool = True) -> str:
     """Cheapest backend whose semantics cover (op, expected-mode, dtype)."""
-    if op not in OPS:
-        raise ValueError(f"unknown op {op!r}")
-    spec = spec or default_spec()
-    candidates = [b for b in BACKENDS.values()
-                  if b.supports(op, uniform_expected=uniform_expected,
-                                dtype=dtype)]
-    return min(candidates,
-               key=lambda b: b.cost(spec, op, n, m, need_fetched)).name
+    return select_backend_with_cost(
+        op, n, m, spec, uniform_expected=uniform_expected, dtype=dtype,
+        need_fetched=need_fetched).choice
 
 
 def execute_backend(table: Array, indices: Array, values: Array, op: str,

@@ -803,6 +803,24 @@ def select_exchange(op: str, n: int, m_global: int,
     pays for its DCN savings — the hint shifts that crossover.  Selection
     only: results never depend on it.
     """
+    return select_exchange_with_cost(
+        op, n, m_global, axes, spec=spec, need_fetched=need_fetched,
+        uniform_expected=uniform_expected, replicas=replicas,
+        include_naive=include_naive, distinct_slots=distinct_slots).choice
+
+
+def select_exchange_with_cost(op: str, n: int, m_global: int,
+                              axes: Sequence[MeshAxis], *,
+                              spec: Optional[perf_model.HardwareSpec] = None,
+                              need_fetched: bool = True,
+                              uniform_expected: bool = True,
+                              replicas: int = 1,
+                              include_naive: bool = False,
+                              distinct_slots: Optional[int] = None
+                              ) -> rmw_engine.Selection:
+    """`select_exchange` returning the full predicted-cost record
+    (`rmw_engine.Selection`) — persisted by the telemetry decision events
+    so the exchange tier's drift is trackable per strategy."""
     if op not in OPS:
         raise ValueError(f"unknown op {op!r}")
     if op == "cas" and not uniform_expected:
@@ -811,12 +829,9 @@ def select_exchange(op: str, n: int, m_global: int,
             "CAS always executes on the un-combined owner-oracle path")
     spec = spec or rmw_engine.default_spec()
     del replicas  # the replica stage cost is identical across strategies
-    best, best_t = "oneshot", float("inf")
-    for name, fn in EXCHANGE_COSTS.items():
-        if name == "naive" and not include_naive:
-            continue
-        t = fn(spec, op, n, m_global, axes, need_fetched,
-               distinct_slots=distinct_slots)
-        if t < best_t:
-            best, best_t = name, t
-    return best
+    costs = {name: fn(spec, op, n, m_global, axes, need_fetched,
+                      distinct_slots=distinct_slots)
+             for name, fn in EXCHANGE_COSTS.items()
+             if name != "naive" or include_naive}
+    best = min(costs, key=costs.get)   # ties: EXCHANGE_COSTS order, as ever
+    return rmw_engine.Selection(best, costs[best], costs)

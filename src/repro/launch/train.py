@@ -18,6 +18,7 @@ from typing import Any, Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro import telemetry
 from repro.checkpoint import ckpt as ckpt_lib
 from repro.checkpoint.ckpt import AsyncCheckpointer
 from repro.configs import get_config, get_reduced
@@ -82,8 +83,13 @@ def train(arch: str, *, steps: int = 100, seq_len: int = 256,
         params, opt_state = state
         batch = synthetic_batch(data_cfg, step, **bkw)
         t0 = time.time()
-        params, opt_state, metrics = step_fn(params, opt_state, batch)
-        metrics = {k: float(v) for k, v in metrics.items()}
+        # the span is the per-step profiler hook: wall_s lands in the event
+        # stream, and under enable(annotate=True) the step also shows up as
+        # a named range in a jax.profiler trace
+        with telemetry.annotation(f"train.step/{step}"), \
+                telemetry.span("train.step", step=step, arch=arch):
+            params, opt_state, metrics = step_fn(params, opt_state, batch)
+            metrics = {k: float(v) for k, v in metrics.items()}
         dt = time.time() - t0
         monitor.record(0, dt)
         if step % log_every == 0 or step == steps - 1:
@@ -163,12 +169,29 @@ def main() -> None:
     ap.add_argument("--chaos", default=None, metavar="SPEC",
                     help="fault-injection spec, e.g. 'seed=7,step=0.05,"
                          "ckpt_save=0.1@2' (same syntax as REPRO_CHAOS)")
+    ap.add_argument("--telemetry", default=None, metavar="SINK",
+                    help="'ring' or a JSONL path: enable the repro.telemetry "
+                         "event stream (same as REPRO_TELEMETRY); render a "
+                         "capture with `python -m repro.telemetry.report`")
+    ap.add_argument("--profile-annotations", action="store_true",
+                    help="open jax.profiler.TraceAnnotation regions around "
+                         "steps and atomics dispatch (needs --telemetry)")
     args = ap.parse_args()
+    if args.telemetry:
+        sink = (telemetry.RingBuffer() if args.telemetry == "ring"
+                else telemetry.JsonlWriter(args.telemetry))
+        telemetry.enable(sink, annotate=args.profile_annotations)
+    else:
+        telemetry.enable_from_env()
     chaos = FaultPlan.from_spec(args.chaos) if args.chaos else None
-    out = train(args.arch, steps=args.steps, seq_len=args.seq_len,
-                global_batch=args.global_batch, reduced=not args.full,
-                ckpt_dir=args.ckpt_dir, lr=args.lr,
-                microbatches=args.microbatches, chaos=chaos)
+    try:
+        out = train(args.arch, steps=args.steps, seq_len=args.seq_len,
+                    global_batch=args.global_batch, reduced=not args.full,
+                    ckpt_dir=args.ckpt_dir, lr=args.lr,
+                    microbatches=args.microbatches, chaos=chaos)
+    finally:
+        if telemetry.enabled():
+            telemetry.disable()      # flush/close the JSONL capture
     print(json.dumps({k: v for k, v in out.items() if k != "history"}))
 
 

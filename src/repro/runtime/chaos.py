@@ -172,12 +172,19 @@ class FaultPlan:
         (the straggler analogue: one slow participant, not a dead one)."""
         if not self.fire(site):
             return
+        from repro import telemetry
         if site == "straggler_delay":
             delay = self.sites[site].delay_s
+            telemetry.record("chaos.fire", site=site,
+                             occurrence=self._fired[site], step=step,
+                             kind="stall", delay_s=delay)
             log.info("chaos: injected %.3fs straggler stall at step %s",
                      delay, step)
             self._sleep(delay)
             return
+        telemetry.record("chaos.fire", site=site,
+                         occurrence=self._fired[site], step=step,
+                         kind="raise")
         raise ChaosError(site, self._fired[site], step)
 
     # --- observability ----------------------------------------------------

@@ -35,6 +35,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, List, Optional, Tuple
 
+from repro import telemetry
 from repro.runtime.chaos import FaultPlan
 
 log = logging.getLogger("repro.runtime")
@@ -105,10 +106,25 @@ class StragglerMonitor:
 
 @dataclass
 class RunResult:
+    """Outcome of :func:`run_with_recovery`.
+
+    ``events`` is the run's structured recovery trace — one dict per
+    ``recovery.fault`` / ``recovery.backoff`` / ``recovery.restore``
+    occurrence, in order, always populated (telemetry enabled or not) so
+    tests and callers assert on fields instead of parsing log text.
+    """
+
     steps_done: int
     failures: int
     restored_from: List[int] = field(default_factory=list)
     backoff_total_s: float = 0.0
+    events: List[dict] = field(default_factory=list)
+
+    def event_counts(self) -> dict:
+        counts: dict = {}
+        for e in self.events:
+            counts[e["event"]] = counts.get(e["event"], 0) + 1
+        return counts
 
 
 def run_with_recovery(step_fn: Callable[[int, Any], Any],
@@ -155,15 +171,27 @@ def run_with_recovery(step_fn: Callable[[int, Any], Any],
     failures = 0
     backoff_total = 0.0
     restored: List[int] = []
+    events: List[dict] = []
+
+    def _emit(event: str, **fields) -> None:
+        # the run-local trace is ALWAYS kept (RunResult.events is API);
+        # the global stream only sees it when telemetry is enabled
+        events.append({"event": event, **fields})
+        telemetry.record(event, **fields)
 
     def _absorb(e: BaseException, what: str) -> None:
         """Count a failure; re-raise fatal/over-budget, else back off."""
         nonlocal failures, backoff_total
         if isinstance(e, FatalFault) or isinstance(e, cfg.fatal_types):
+            _emit("recovery.fault", site=what, error=type(e).__name__,
+                  message=str(e), attempt=failures + 1, fatal=True)
             log.error("%s failed with fatal %s: %s — not retrying",
                       what, type(e).__name__, e)
             raise e
         failures += 1
+        _emit("recovery.fault", site=what, error=type(e).__name__,
+              message=str(e), attempt=failures, fatal=False,
+              budget=cfg.max_failures)
         log.warning("%s failed (%s: %s); recovery %d/%d", what,
                     type(e).__name__, e, failures, cfg.max_failures)
         if failures > cfg.max_failures:
@@ -176,6 +204,7 @@ def run_with_recovery(step_fn: Callable[[int, Any], Any],
                 f"last error: {type(e).__name__}: {e}") from e
         delay = backoff_delay(cfg, failures)
         backoff_total += delay
+        _emit("recovery.backoff", attempt=failures, backoff_s=delay)
         log.info("recovery backoff: sleeping %.4fs before attempt %d",
                  delay, failures + 1)
         sleep_fn(delay)
@@ -197,10 +226,14 @@ def run_with_recovery(step_fn: Callable[[int, Any], Any],
             # change, so the initial state's live tables need adopting;
             # scratch at startup does not — init_state was built under
             # the current mesh (tests/test_reshard.py pins both halves)
+            _emit("recovery.restore", step=0, scratch=True,
+                  resharded=scratch_adopts and reshard_fn is not None)
             return 0, _adopt(_initial()) if scratch_adopts else _initial()
         s, st = ck
         st = _adopt(st)
         restored.append(s)
+        _emit("recovery.restore", step=s, scratch=False,
+              resharded=reshard_fn is not None)
         return s, st
 
     def _recover(what: str, scratch_adopts: bool = True) -> Tuple[int, Any]:
@@ -229,4 +262,4 @@ def run_with_recovery(step_fn: Callable[[int, Any], Any],
             step, state = _recover("restore")
     return RunResult(steps_done=step, failures=failures,
                      restored_from=restored,
-                     backoff_total_s=backoff_total)
+                     backoff_total_s=backoff_total, events=events)

@@ -1,0 +1,45 @@
+"""`repro.telemetry` — structured events, drift tracking, profiler hooks.
+
+The observability layer every tier of the atomics stack reports into:
+
+* `record` / `span` / `annotation` — the instrumentation primitives
+  (near-zero cost disabled; see `repro.telemetry.core`).
+* `enable` / `disable` / `capture` / `enable_from_env` — stream control.
+* `RingBuffer` / `JsonlWriter` / `Counters` — the pluggable sinks.
+* `repro.telemetry.drift` — predicted-vs-measured aggregation over the
+  event stream and the `fit_spec_update` HardwareSpec-correction hook.
+* ``python -m repro.telemetry.report capture.jsonl`` — render a capture.
+
+Event catalogue (the schema table lives in README "Observability"):
+
+====================  =====================================================
+``atomics.execute``   one per `repro.atomics.execute` op batch: tier,
+                      backend/strategy chosen, op, n, m, distinct_slots,
+                      predicted_s (+ measured_s eager under ``sync``)
+``atomics.retry.round``  one per `execute_until` round: pending/issued/
+                      resolved counts, strategy, predicted_s, measured_s
+``atomics.retry.done``   end of an `execute_until` call: round-count
+                      histogram (the contention signal), unresolved count
+``atomics.reshard.migrate``  one per table migration: path chosen,
+                      predicted_s per path, measured_s
+``recovery.fault``    one per absorbed/raised failure: site, error type,
+                      attempt number, fatal flag
+``recovery.backoff``  one per recovery backoff sleep: attempt, backoff_s
+``recovery.restore``  one per restore: step resumed from (or scratch)
+``chaos.fire``        one per injected fault: site, occurrence, step
+``train.step``        per-step span from `launch.train`: wall_s, step
+====================  =====================================================
+"""
+
+from repro.telemetry.core import (Counters, JsonlWriter, RingBuffer, Sink,
+                                  Span, annotation, annotations_enabled,
+                                  capture, disable, enable, enable_from_env,
+                                  enabled, read_jsonl, record, record_event,
+                                  sinks, span, sync_enabled, TELEMETRY_ENV)
+
+__all__ = [
+    "Counters", "JsonlWriter", "RingBuffer", "Sink", "Span",
+    "annotation", "annotations_enabled", "capture", "disable", "enable",
+    "enable_from_env", "enabled", "read_jsonl", "record", "record_event",
+    "sinks", "span", "sync_enabled", "TELEMETRY_ENV",
+]

@@ -1,0 +1,346 @@
+"""Structured event stream: the measurement layer under the cost models.
+
+The paper's methodology is *check every prediction against the hardware*;
+the stack's three selector tiers (`select_backend`, `select_exchange`,
+`select_migration`) make those predictions at every dispatch — this module
+is where the predictions and the measurements meet.  Every layer reports
+into one process-wide event stream:
+
+* ``record(event, **fields)`` — one structured event (a flat dict), routed
+  to every installed sink.  **Near-zero cost when disabled**: the hot-path
+  guard is a single module-global boolean (`enabled()`), so instrumented
+  code pays one branch per call site when telemetry is off.
+* ``span(name, **fields)`` — timing context manager.  It *always* measures
+  (``perf_counter`` on enter/exit, exposing ``.wall_s``) so benchmarks can
+  use it as their one clock, and records an event only when enabled.  This
+  is the single warmup-free timing convention shared by ``benchmarks/``
+  and the production paths.
+* sinks — :class:`RingBuffer` (bounded in-memory, tests), ``JsonlWriter``
+  (one JSON object per line, offline analysis / the report CLI),
+  ``Counters`` (streaming aggregation, no retention).
+
+Jit discipline: events are recorded at **trace/dispatch boundaries only**.
+Inside ``jit``/``shard_map``, instrumentation runs at *trace* time — once
+per compilation, not once per executed call (and once per call *site*, not
+once per device: ``shard_map`` traces its body a single time).  Such
+events carry ``traced=True`` and no measured wall time; cached executions
+of a jitted function emit nothing, so repeated calls never duplicate
+events.  Measured wall times come from the host-side call sites (eager
+`atomics.execute` under ``sync=True``, the retry combinator's per-round
+dispatch, migration, train steps).
+
+Thread safety: sink dispatch holds one module lock; sinks themselves need
+no internal locking.  Enabling/disabling swaps the sink tuple atomically.
+"""
+
+from __future__ import annotations
+
+import collections
+import contextlib
+import io
+import json
+import os
+import threading
+import time
+from typing import Any, Callable, Dict, Iterable, List, Optional, Tuple
+
+#: env var: a JSONL path (or "ring") enabling telemetry at process start
+#: for unmodified callers — the observability sibling of ``REPRO_CHAOS``
+TELEMETRY_ENV = "REPRO_TELEMETRY"
+
+_lock = threading.Lock()
+_sinks: Tuple["Sink", ...] = ()
+_enabled: bool = False          # the one hot-path guard
+_sync: bool = False             # block_until_ready around measured calls
+_annotate: bool = False         # jax.profiler.TraceAnnotation at dispatch
+
+
+# ---------------------------------------------------------------------------
+# Sinks
+# ---------------------------------------------------------------------------
+
+class Sink:
+    """One consumer of the event stream.  ``emit`` is called under the
+    module lock with a flat dict (the caller owns the dict; copy if you
+    retain it past the call — the built-in sinks retain it as-is since
+    instrumentation never mutates an emitted event)."""
+
+    def emit(self, event: Dict[str, Any]) -> None:
+        raise NotImplementedError
+
+    def close(self) -> None:
+        pass
+
+
+class RingBuffer(Sink):
+    """Bounded in-memory sink — the test/inspection default."""
+
+    def __init__(self, capacity: int = 4096):
+        self._buf: collections.deque = collections.deque(maxlen=capacity)
+
+    def emit(self, event: Dict[str, Any]) -> None:
+        self._buf.append(event)
+
+    @property
+    def events(self) -> List[Dict[str, Any]]:
+        return list(self._buf)
+
+    def __len__(self) -> int:
+        return len(self._buf)
+
+    def clear(self) -> None:
+        self._buf.clear()
+
+
+def _jsonable(x):
+    """Best-effort scalar coercion: numpy scalars/arrays -> python, other
+    non-JSON types -> repr.  Events must never make a sink raise."""
+    if x is None or isinstance(x, (bool, int, float, str)):
+        return x
+    if isinstance(x, (list, tuple)):
+        return [_jsonable(v) for v in x]
+    if isinstance(x, dict):
+        return {str(k): _jsonable(v) for k, v in x.items()}
+    item = getattr(x, "item", None)
+    if item is not None:
+        try:
+            return _jsonable(item())
+        except Exception:  # noqa: BLE001 — non-scalar arrays etc.
+            pass
+    tolist = getattr(x, "tolist", None)
+    if tolist is not None:
+        try:
+            return _jsonable(tolist())
+        except Exception:  # noqa: BLE001
+            pass
+    return repr(x)
+
+
+class JsonlWriter(Sink):
+    """One JSON object per line — the capture format the report CLI and
+    `telemetry.drift` read back (`read_jsonl`)."""
+
+    def __init__(self, path: str):
+        self.path = path
+        self._f: Optional[io.TextIOBase] = open(path, "w")
+
+    def emit(self, event: Dict[str, Any]) -> None:
+        if self._f is None:
+            return
+        self._f.write(json.dumps(
+            {k: _jsonable(v) for k, v in event.items()}) + "\n")
+
+    def close(self) -> None:
+        if self._f is not None:
+            self._f.close()
+            self._f = None
+
+
+def read_jsonl(path: str) -> List[Dict[str, Any]]:
+    """Load a `JsonlWriter` capture back into a list of event dicts."""
+    out: List[Dict[str, Any]] = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if line:
+                out.append(json.loads(line))
+    return out
+
+
+class Counters(Sink):
+    """Streaming aggregation, no event retention: per event name a count,
+    and per numeric field a running (count, sum, min, max)."""
+
+    def __init__(self):
+        self.counts: Dict[str, int] = collections.defaultdict(int)
+        self._num: Dict[Tuple[str, str], List[float]] = {}
+
+    def emit(self, event: Dict[str, Any]) -> None:
+        name = str(event.get("event"))
+        self.counts[name] += 1
+        for k, v in event.items():
+            if k in ("event", "t") or isinstance(v, bool) \
+                    or not isinstance(v, (int, float)):
+                continue
+            agg = self._num.get((name, k))
+            if agg is None:
+                self._num[(name, k)] = [1, float(v), float(v), float(v)]
+            else:
+                agg[0] += 1
+                agg[1] += v
+                agg[2] = min(agg[2], v)
+                agg[3] = max(agg[3], v)
+
+    def summary(self) -> Dict[str, Dict[str, Any]]:
+        """``{event: {count, fields: {field: {n, sum, mean, min, max}}}}``"""
+        out: Dict[str, Dict[str, Any]] = {}
+        for name, c in self.counts.items():
+            out[name] = {"count": c, "fields": {}}
+        for (name, k), (n, s, lo, hi) in self._num.items():
+            out[name]["fields"][k] = {"n": n, "sum": s, "mean": s / n,
+                                      "min": lo, "max": hi}
+        return out
+
+
+# ---------------------------------------------------------------------------
+# The stream
+# ---------------------------------------------------------------------------
+
+def enabled() -> bool:
+    """The hot-path guard instrumented code checks before doing any work."""
+    return _enabled
+
+
+def sync_enabled() -> bool:
+    """True when measured call sites should ``block_until_ready`` so wall
+    times mean device time, not dispatch time (drift captures need this)."""
+    return _enabled and _sync
+
+
+def annotations_enabled() -> bool:
+    """True when dispatch sites should open `jax.profiler.TraceAnnotation`
+    scopes (named regions in a profiler trace)."""
+    return _enabled and _annotate
+
+
+def enable(*sinks: Sink, sync: bool = False, annotate: bool = False) -> None:
+    """Install ``sinks`` (replacing any current set) and turn the stream on.
+
+    ``sync=True`` makes instrumented dispatch sites block until results are
+    ready before reading the clock — accurate measured-vs-predicted events
+    at the price of de-pipelining; leave False in production.
+    ``annotate=True`` additionally opens ``jax.profiler.TraceAnnotation``
+    regions around engine dispatch / exchange collectives / train steps.
+    """
+    global _sinks, _enabled, _sync, _annotate
+    with _lock:
+        _sinks = tuple(sinks) or (RingBuffer(),)
+        _sync = bool(sync)
+        _annotate = bool(annotate)
+        _enabled = True
+
+
+def disable() -> None:
+    """Turn the stream off and close the installed sinks."""
+    global _sinks, _enabled, _sync, _annotate
+    with _lock:
+        for s in _sinks:
+            try:
+                s.close()
+            except Exception:  # noqa: BLE001 — teardown must not raise
+                pass
+        _sinks = ()
+        _enabled = False
+        _sync = False
+        _annotate = False
+
+
+def sinks() -> Tuple[Sink, ...]:
+    return _sinks
+
+
+@contextlib.contextmanager
+def capture(sink: Optional[Sink] = None, *, sync: bool = False,
+            annotate: bool = False):
+    """Scoped enable: install ``sink`` (default: a fresh :class:`RingBuffer`)
+    *in addition to* any already-installed sinks, yield it, and restore the
+    previous state on exit.  The standard test/benchmark spelling::
+
+        with telemetry.capture(sync=True) as buf:
+            atomics.execute(...)
+        events = buf.events
+    """
+    global _sinks, _enabled, _sync, _annotate
+    target = sink if sink is not None else RingBuffer()
+    with _lock:
+        prev = (_sinks, _enabled, _sync, _annotate)
+        _sinks = prev[0] + (target,)
+        _sync = bool(sync) or _sync
+        _annotate = bool(annotate) or _annotate
+        _enabled = True
+    try:
+        yield target
+    finally:
+        with _lock:
+            _sinks, _enabled, _sync, _annotate = prev
+        if sink is None:
+            pass                      # caller keeps the buffer; nothing to close
+        # an explicitly passed sink stays open — its owner closes it
+
+
+def record(event: str, **fields) -> None:
+    """Record one structured event.  No-op (one boolean check) when the
+    stream is disabled; never raises."""
+    if not _enabled:
+        return
+    ev: Dict[str, Any] = {"event": event, "t": time.time()}
+    ev.update(fields)
+    record_event(ev)
+
+
+def record_event(ev: Dict[str, Any]) -> None:
+    """Hot-path variant of :func:`record`: the caller hands over a prebuilt
+    event dict (must contain ``"event"``; ``"t"`` is stamped here if
+    absent).  Ownership transfers to the stream — don't mutate after."""
+    if not _enabled:
+        return
+    if "t" not in ev:
+        ev["t"] = time.time()
+    with _lock:
+        for s in _sinks:
+            try:
+                s.emit(ev)
+            except Exception:  # noqa: BLE001 — a broken sink must not take
+                pass           # down the instrumented path
+
+
+class Span:
+    """Timing scope: measures wall seconds between enter and exit (always —
+    ``.wall_s`` is valid whether or not the stream is on) and records one
+    ``{event: name, wall_s: ...}`` event when enabled."""
+
+    __slots__ = ("name", "fields", "wall_s", "_t0")
+
+    def __init__(self, name: str, fields: Dict[str, Any]):
+        self.name = name
+        self.fields = fields
+        self.wall_s: Optional[float] = None
+
+    def __enter__(self) -> "Span":
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> bool:
+        self.wall_s = time.perf_counter() - self._t0
+        if _enabled:
+            record(self.name, wall_s=self.wall_s,
+                   ok=exc_type is None, **self.fields)
+        return False
+
+
+def span(name: str, **fields) -> Span:
+    """``with telemetry.span("train.step", step=i) as sp: ...`` — see
+    :class:`Span`.  ``sp.wall_s`` is the one clock benchmarks and
+    production paths share."""
+    return Span(name, fields)
+
+
+def annotation(name: str):
+    """A `jax.profiler.TraceAnnotation` scope when annotations are enabled,
+    else a no-op context — cheap enough to leave on dispatch sites."""
+    if not (_enabled and _annotate):
+        return contextlib.nullcontext()
+    import jax.profiler
+    return jax.profiler.TraceAnnotation(name)
+
+
+def enable_from_env() -> bool:
+    """The ``REPRO_TELEMETRY`` hook: ``"ring"`` installs a RingBuffer,
+    anything else is treated as a JSONL output path.  Returns True when the
+    stream was enabled.  Called by `launch.train` so unmodified training
+    invocations can be instrumented from the environment."""
+    target = os.environ.get(TELEMETRY_ENV, "").strip()
+    if not target:
+        return False
+    enable(RingBuffer() if target == "ring" else JsonlWriter(target))
+    return True

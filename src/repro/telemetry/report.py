@@ -1,0 +1,106 @@
+"""Render a telemetry JSONL capture: ``python -m repro.telemetry.report``.
+
+Three sections — event counts with numeric-field aggregates (a replayed
+:class:`~repro.telemetry.core.Counters` sink), the cost-model drift table
+(`telemetry.drift.summarize`), and the proposed `HardwareSpec` correction
+(`fit_spec_update`) when any selector tier shows enough drift samples.
+``--json`` emits the same content as one machine-readable object (the
+format ``benchmarks/results/telemetry_drift.json`` is committed in).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Any, Dict, List
+
+from repro.telemetry import drift as drift_lib
+from repro.telemetry.core import Counters, read_jsonl
+
+
+def build_report(events: List[Dict[str, Any]], *, spec=None,
+                 fit: bool = True) -> Dict[str, Any]:
+    """The report as data: ``{events: Counters.summary(), drift: [rows],
+    spec_update: {field: {...}}}`` — the JSON the CLI prints/renders."""
+    counters = Counters()
+    for ev in events:
+        counters.emit(ev)
+    stats = drift_lib.aggregate(events)
+    out: Dict[str, Any] = {"n_events": len(events),
+                           "events": counters.summary(),
+                           "drift": drift_lib.summarize(stats)}
+    if fit:
+        fitted = drift_lib.fit_spec_update(stats, spec)
+        out["spec_update"] = fitted["fields"]
+    return out
+
+
+def _fmt_s(v: float) -> str:
+    if v != v:                       # NaN
+        return "-"
+    for unit, scale in (("s", 1.0), ("ms", 1e-3), ("us", 1e-6)):
+        if abs(v) >= scale:
+            return f"{v / scale:.3g}{unit}"
+    return f"{v / 1e-9:.3g}ns"
+
+
+def render_text(report: Dict[str, Any]) -> str:
+    lines = [f"telemetry report — {report['n_events']} events", ""]
+    lines.append(f"{'event':<28}{'count':>8}  numeric fields (mean)")
+    for name in sorted(report["events"]):
+        info = report["events"][name]
+        means = "  ".join(
+            f"{k}={_fmt_s(v['mean']) if k.endswith('_s') else round(v['mean'], 3)}"
+            for k, v in sorted(info["fields"].items()))
+        lines.append(f"{name:<28}{info['count']:>8}  {means}")
+    rows = report["drift"]
+    lines += ["", "cost-model drift (measured / predicted, geometric mean)"]
+    if rows:
+        lines.append(f"{'tier':<11}{'choice':<14}{'op':<6}{'size':<7}"
+                     f"{'n':>5}{'ratio':>10}{'min':>10}{'max':>10}"
+                     f"{'pred':>9}{'meas':>9}")
+        for r in rows:
+            lines.append(
+                f"{r['tier']:<11}{r['choice']:<14}{r['op']:<6}"
+                f"{r['size_bucket']:<7}{r['n']:>5}{r['ratio']:>10.3g}"
+                f"{r['min_ratio']:>10.3g}{r['max_ratio']:>10.3g}"
+                f"{_fmt_s(r['mean_predicted_s']):>9}"
+                f"{_fmt_s(r['mean_measured_s']):>9}")
+    else:
+        lines.append("  (no (predicted_s, measured_s) pairs in the capture)")
+    upd = report.get("spec_update") or {}
+    lines += ["", "proposed HardwareSpec correction (fit_spec_update)"]
+    if upd:
+        for name, f in sorted(upd.items()):
+            lines.append(f"  {name}: {f['current']:.3g} -> "
+                         f"{f['proposed']:.3g}  (drift x{f['ratio']:.2f}, "
+                         f"n={f['n']})")
+    else:
+        lines.append("  (not enough drift samples)")
+    return "\n".join(lines)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.telemetry.report",
+        description="Render a repro.telemetry JSONL capture.")
+    ap.add_argument("capture", help="JSONL file written by JsonlWriter "
+                                    "(e.g. REPRO_TELEMETRY=out.jsonl)")
+    ap.add_argument("--json", action="store_true",
+                    help="emit the report as one JSON object")
+    ap.add_argument("--no-fit", action="store_true",
+                    help="skip the HardwareSpec correction section")
+    args = ap.parse_args(argv)
+    events = read_jsonl(args.capture)
+    report = build_report(events, fit=not args.no_fit)
+    if args.json:
+        json.dump(report, sys.stdout, indent=2)
+        sys.stdout.write("\n")
+    else:
+        print(render_text(report))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -114,22 +114,63 @@ def test_backoff_delay_is_pure_capped_exponential():
     assert all(d >= 0.0 for d in a)
 
 
-def test_recovery_sleeps_the_backoff_and_logs_it(caplog):
+def test_recovery_sleeps_the_backoff_and_records_it():
     store = Store()
     slept = []
     cfg = FaultConfig(max_failures=5, checkpoint_every=5,
                       backoff_base_s=0.01, backoff_factor=2.0,
                       backoff_jitter=0.0)
-    with caplog.at_level(logging.INFO, logger="repro.runtime"):
-        res = run_with_recovery(
-            lambda s, x: x + 1, 0, 20, cfg, store.save, store.restore,
-            failure_injector=_crashing_injector({4: 1, 9: 1}),
-            sleep_fn=slept.append)
+    res = run_with_recovery(
+        lambda s, x: x + 1, 0, 20, cfg, store.save, store.restore,
+        failure_injector=_crashing_injector({4: 1, 9: 1}),
+        sleep_fn=slept.append)
     assert res.steps_done == 20 and res.failures == 2
     assert slept == [0.01, 0.02]                   # grows per failure
     assert res.backoff_total_s == pytest.approx(sum(slept))
-    assert sum("recovery backoff: sleeping" in r.message
-               for r in caplog.records) == 2
+    # the structured trace replaces log-text parsing: one backoff event per
+    # absorbed failure, carrying the exact delay slept
+    backoffs = [e for e in res.events if e["event"] == "recovery.backoff"]
+    assert [e["backoff_s"] for e in backoffs] == slept
+    assert [e["attempt"] for e in backoffs] == [1, 2]
+    faults = [e for e in res.events if e["event"] == "recovery.fault"]
+    assert [e["site"] for e in faults] == ["step 4", "step 9"]
+    assert all(e["error"] == "RuntimeError" and not e["fatal"]
+               for e in faults)
+
+
+def test_run_result_events_summarize_the_recovery_trace():
+    store = Store()
+    res = run_with_recovery(
+        lambda s, x: x + 1, 0, 20,
+        FaultConfig(max_failures=5, checkpoint_every=5, backoff_base_s=0.0),
+        store.save, store.restore,
+        failure_injector=_crashing_injector({4: 1, 9: 1}),
+        sleep_fn=lambda d: None)
+    counts = res.event_counts()
+    # startup scratch restore + one restore per absorbed failure
+    assert counts == {"recovery.restore": 3, "recovery.fault": 2,
+                      "recovery.backoff": 2}
+    restores = [e for e in res.events if e["event"] == "recovery.restore"]
+    # startup and the first failure (no checkpoint yet) restart scratch;
+    # the second failure resumes from the step-5 checkpoint
+    assert [e["scratch"] for e in restores] == [True, True, False]
+    assert restores[-1]["step"] == 5
+
+
+def test_fatal_fault_event_carries_the_fatal_flag():
+    store = Store()
+    cfg = FaultConfig(max_failures=100, checkpoint_every=5)
+    from repro import telemetry
+    with telemetry.capture() as buf:
+        with pytest.raises(FatalFault):
+            run_with_recovery(
+                lambda s, x: x + 1, 0, 20, cfg, store.save, store.restore,
+                failure_injector=lambda s: (_ for _ in ()).throw(
+                    FatalFault("operator abort")),
+                sleep_fn=lambda d: None)
+    faults = [e for e in buf.events if e["event"] == "recovery.fault"]
+    assert len(faults) == 1 and faults[0]["fatal"] is True
+    assert faults[0]["error"] == "FatalFault"
 
 
 def test_deadline_budget_raises_timeout():
