@@ -4,7 +4,7 @@ export PYTHONPATH := src:.:$(PYTHONPATH)
 
 .PHONY: test test-tier1 test-deprecations test-chaos test-telemetry smoke \
         bench-rmw bench-rmw-sharded bench-atomics bench-reshard calibrate \
-        bench-telemetry
+        bench-telemetry lint-atomics lint-ruff
 
 # Tier-1 gate + benchmark smoke (what CI runs).
 test: test-tier1 smoke
@@ -51,6 +51,22 @@ test-telemetry:
 	$(PYTHON) -m pytest -q tests/test_telemetry.py \
 	  tests/test_fault_tolerance.py
 
+# Static atomics contract lint (repro.analysis): traces every registered
+# entry point to a jaxpr (no execution) and applies rules A001-A005 —
+# races into AtomicTable buffers, CAS-strength downgrades, unbounded
+# retry loops, donation hazards, shard-contract violations.  Exit 1 on
+# any unsuppressed error-severity finding; its own CI lane.
+lint-atomics:
+	$(PYTHON) -m repro.analysis.lint
+
+# Style lint (ruff, from requirements-dev.txt).  Guarded: the baked
+# container image does not ship ruff — skip with a notice rather than
+# fail environments that only have the jax toolchain.
+lint-ruff:
+	@$(PYTHON) -m ruff --version >/dev/null 2>&1 \
+	  && $(PYTHON) -m ruff check src/repro/analysis \
+	  || echo "ruff not installed (pip install -r requirements-dev.txt); skipping"
+
 # Where `make smoke` drops its instrumented capture (JSONL, overwritten).
 SMOKE_TRACE ?= /tmp/repro_smoke_trace.jsonl
 
@@ -64,7 +80,7 @@ SMOKE_TRACE ?= /tmp/repro_smoke_trace.jsonl
 # the captured events — the full observability loop in one make target.
 smoke:
 	$(PYTHON) benchmarks/run.py --fast \
-	  --only latency,bandwidth,rmw_sharded,reshard,fault_recovery,telemetry_drift
+	  --only latency,bandwidth,rmw_sharded,reshard,fault_recovery,telemetry_drift,analysis
 	REPRO_TELEMETRY=$(SMOKE_TRACE) $(PYTHON) benchmarks/run.py --fast \
 	  --only latency
 	$(PYTHON) -m repro.telemetry.report $(SMOKE_TRACE)

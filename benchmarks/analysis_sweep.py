@@ -1,0 +1,44 @@
+"""Static-analysis sweep as a zero-cost benchmark "suite".
+
+Runs the `repro.analysis` lint over every registered entry point (the
+same sweep as ``python -m repro.analysis.lint``) and emits one CSV row
+per entry with the wall time of the trace+rules pass.  Nothing executes
+on devices — the point of registering it here is that ``make smoke``
+exercises the linter end-to-end on every CI run, so the sweep (and every
+entry point it traces) can never silently rot.
+
+Raises on unsuppressed error-severity findings: a red sweep fails the
+harness like any other broken benchmark.
+"""
+
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import Csv
+
+
+def run(csv: Csv, fast: bool = False) -> None:
+    del fast                           # the sweep is already the fast path
+    from repro.analysis.findings import ERROR
+    from repro.analysis.lint import sweep
+
+    errors = []
+    for entry in _entry_names():
+        t0 = time.perf_counter()
+        findings = [f for fs in sweep([entry]).values() for f in fs]
+        wall_us = (time.perf_counter() - t0) * 1e6
+        n_sup = sum(1 for f in findings if f.suppressed)
+        csv.add(f"analysis/{entry}", wall_us,
+                f"findings={len(findings)};suppressed={n_sup}")
+        errors += [f for f in findings
+                   if f.severity == ERROR and not f.suppressed]
+    if errors:
+        raise AssertionError(
+            "analysis sweep found unsuppressed errors:\n"
+            + "\n".join(f.format() for f in errors))
+
+
+def _entry_names():
+    from repro.analysis.entries import ENTRY_POINTS
+    return list(ENTRY_POINTS)

@@ -32,6 +32,10 @@ Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.Csv).
                                                 <5% enabled-stream overhead
                                                 gate; emits results/
                                                 telemetry_drift.json)
+  analysis          Static lint sweep          (repro.analysis over all
+                                                registered entry points —
+                                                zero device cost; fails on
+                                                unsuppressed errors)
 """
 
 from __future__ import annotations
@@ -48,10 +52,11 @@ def main() -> None:
                     help="smaller problem sizes (CI)")
     args = ap.parse_args()
 
-    from benchmarks import (bandwidth, bfs, calibrate, contention,
-                            fault_recovery, latency, model_validation,
-                            operand_size, operands_fetched, prefetcher,
-                            reshard, rmw_backends, rmw_sharded, roofline,
+    from benchmarks import (analysis_sweep, bandwidth, bfs, calibrate,
+                            contention, fault_recovery, latency,
+                            model_validation, operand_size,
+                            operands_fetched, prefetcher, reshard,
+                            rmw_backends, rmw_sharded, roofline,
                             telemetry_drift, unaligned)
     from benchmarks.common import Csv
     from repro import telemetry
@@ -76,6 +81,7 @@ def main() -> None:
         "calibrate": lambda c: calibrate.run(c, fast=args.fast),
         "fault_recovery": lambda c: fault_recovery.run(c, fast=args.fast),
         "telemetry_drift": lambda c: telemetry_drift.run(c, fast=args.fast),
+        "analysis": lambda c: analysis_sweep.run(c, fast=args.fast),
         "model_validation": model_validation.run,
         "roofline": roofline.run,
     }

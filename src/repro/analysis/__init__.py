@@ -1,0 +1,119 @@
+"""repro.analysis — jaxpr-level atomics race detector & contract linter.
+
+Static analysis over traced jaxprs: `check(fn, *args)` traces ``fn`` with
+`jax.make_jaxpr` (no execution, no devices) under the
+`repro.atomics.contracts` observer and applies the rule engine:
+
+====  ========  =====================================================
+id    severity  what it catches
+====  ========  =====================================================
+A001  error     raw scatter / ``.at[].set``/``.add`` into an
+                AtomicTable buffer, or aliasing-capable scatter races
+A002  warning   CAS batches expressible as Faa/Min/Max/Swp
+                (consensus number 2 instead of ∞)
+A003  warning   unbounded while+CAS retry loops (use
+                ``atomics.execute_until``)
+A004  error     donated buffers read after the donating call; donating
+                step functions handed to recovery without a factory
+A005  error     sharded-table execute outside shard_map / unbound mesh
+                axes / incoherent mixed ``reverse_ranks``
+====  ========  =====================================================
+
+Suppress a deliberate pattern with ``# atomics-lint: disable=A001`` on
+(or directly above) the flagged line — suppressed findings stay visible
+in output, marked, so silenced true positives remain auditable.
+
+CLI: ``python -m repro.analysis.lint`` sweeps the registered entry points
+(`repro.analysis.entries`).  Pytest: the ``atomics_lint`` fixture
+(`repro.analysis.pytest_plugin`) asserts clean passes in test suites.
+"""
+
+from __future__ import annotations
+
+import inspect
+from typing import Callable, Iterable, List, Optional
+
+from repro import telemetry
+from repro.analysis.findings import (ERROR, RULES, WARNING, Finding,
+                                     apply_suppressions, make_finding)
+from repro.analysis import rules as _rules
+from repro.analysis import trace as _trace
+
+__all__ = ["check", "check_recovery", "Finding", "RULES", "ERROR",
+           "WARNING"]
+
+_SEV_ORDER = {ERROR: 0, WARNING: 1}
+
+
+def _finalize(findings: List[Finding], entry: Optional[str],
+              ignore: Iterable[str]) -> List[Finding]:
+    ignore = set(ignore)
+    findings = [f for f in findings if f.rule not in ignore]
+    apply_suppressions(findings)
+    for f in findings:
+        f.entry = entry
+        telemetry.record("analysis.finding", rule=f.rule,
+                         severity=f.severity, file=f.file, line=f.line,
+                         entry=entry, suppressed=f.suppressed,
+                         message=f.message)
+    findings.sort(key=lambda f: (_SEV_ORDER.get(f.severity, 2), f.rule,
+                                 f.where))
+    return findings
+
+
+def check(fn: Callable, *args, entry: Optional[str] = None,
+          ignore: Iterable[str] = (), **kwargs) -> List[Finding]:
+    """Statically check ``fn(*args, **kwargs)`` against all rules.
+
+    Arguments may be concrete arrays, `jax.ShapeDtypeStruct` stand-ins, or
+    `AtomicTable`s (mixing is fine); nothing executes.  Returns findings
+    sorted errors-first; ``ignore`` drops whole rule ids; per-line
+    suppression comments mark (not drop) findings.
+    """
+    tr = _trace.trace(fn, *args, **kwargs)
+    return _finalize(_rules.run(tr), entry, ignore)
+
+
+def _donate_argnums(step_fn, example_args) -> tuple:
+    """Best-effort donation metadata for a step function: an explicit
+    ``declare_donation`` wrapper, or jit's own trace-time report."""
+    d = getattr(step_fn, "donate_argnums", None)
+    if d:
+        return tuple(d)
+    if example_args is not None:
+        try:
+            return tuple(step_fn.trace(*example_args).donate_argnums or ())
+        except Exception:  # noqa: BLE001 — not a jitted fn / trace failed
+            pass
+    return ()
+
+
+def check_recovery(step_fn: Callable, init_state,
+                   *, example_args=None, entry: Optional[str] = None,
+                   ignore: Iterable[str] = ()) -> List[Finding]:
+    """The API-level half of rule A004: a donating step function handed to
+    `runtime.fault_tolerance.run_with_recovery` together with a *captured
+    state value* (instead of a zero-arg factory) re-feeds donated — hence
+    possibly aliased — buffers on every restart.  This is exactly the PR-6
+    recovery bug, caught statically.
+    """
+    findings: List[Finding] = []
+    donated = _donate_argnums(step_fn, example_args)
+    if donated and not callable(init_state):
+        fn = inspect.unwrap(getattr(step_fn, "fn", step_fn))
+        file = line = None
+        try:
+            file = inspect.getsourcefile(fn)
+            _, line = inspect.getsourcelines(fn)
+        except (TypeError, OSError):
+            pass
+        findings.append(make_finding(
+            "A004",
+            f"step function donates argnums {tuple(donated)} but "
+            f"run_with_recovery received a captured state value — after the "
+            f"first step the captured buffers are donated away, and every "
+            f"recovery restart replays aliased garbage; pass a zero-arg "
+            f"state factory (init_state=lambda: ...) so restarts rebuild "
+            f"fresh buffers", file=file, line=line,
+            provenance="check_recovery"))
+    return _finalize(findings, entry, ignore)

@@ -1,0 +1,59 @@
+"""Pytest integration: the ``atomics_lint`` fixture.
+
+Re-export it from a ``conftest.py`` to make it available to a suite::
+
+    from repro.analysis.pytest_plugin import atomics_lint  # noqa: F401
+
+Then in tests::
+
+    def test_my_kernel_clean(atomics_lint):
+        atomics_lint(my_fn, example_args)          # raises on errors
+
+    def test_entry_points_clean(atomics_lint):
+        atomics_lint.sweep()                       # all registered entries
+
+The fixture object is callable (``check`` + assert) and carries
+``.sweep(names=None)`` for entry-point sweeps; both raise
+``pytest.fail`` with the formatted findings when any unsuppressed
+error-severity finding is present, and return the findings list
+otherwise so tests can assert on warnings too.
+"""
+
+from __future__ import annotations
+
+from typing import List, Optional, Sequence
+
+import pytest
+
+from repro import analysis
+from repro.analysis.findings import ERROR, Finding
+
+
+class AtomicsLint:
+    """Assertion helper wrapping `analysis.check` / `lint.sweep`."""
+
+    @staticmethod
+    def _gate(findings: List[Finding]) -> List[Finding]:
+        errors = [f for f in findings
+                  if f.severity == ERROR and not f.suppressed]
+        if errors:
+            pytest.fail("atomics lint errors:\n" + "\n".join(
+                f.format() for f in errors), pytrace=False)
+        return findings
+
+    def __call__(self, fn, *args, **kwargs) -> List[Finding]:
+        return self._gate(analysis.check(fn, *args, **kwargs))
+
+    def check_recovery(self, step_fn, init_state, **kw) -> List[Finding]:
+        return self._gate(analysis.check_recovery(step_fn, init_state,
+                                                  **kw))
+
+    def sweep(self, names: Optional[Sequence[str]] = None
+              ) -> List[Finding]:
+        from repro.analysis.lint import sweep
+        return self._gate([f for fs in sweep(names).values() for f in fs])
+
+
+@pytest.fixture
+def atomics_lint() -> AtomicsLint:
+    return AtomicsLint()

@@ -1,0 +1,158 @@
+"""Tracing layer: function -> (jaxpr, recorded contract call sites).
+
+`jax.make_jaxpr` runs the function abstractly — **no execution, no
+devices** — while the `repro.atomics.contracts` observer records every
+atomics API interaction the trace performs: each `AtomicTable`
+construction, each `execute` call site (op kind, tier arguments), each
+`execute_until` entry.  Array identity crosses into the jaxpr via the
+contracts *marker primitive*: table data and op operands pass through an
+identity equation tagged with a role (and the call-site id), because
+trace-internal `Var` objects are renumbered by jax's literal-inlining
+clone pass and cannot be matched by identity afterwards.  The rule engine
+(`repro.analysis.rules`) walks the jaxpr and joins marker equations back
+to the recorded call sites.
+
+A trace that aborts is still a result: a sharded-table execute outside
+``shard_map`` raises the executor's guidance ValueError mid-trace — the
+observer already recorded the call site, and the shard-contract rule
+(A005) turns (recorded site, aborted trace) into a finding instead of a
+crash.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+from repro.atomics import contracts
+from repro.atomics.ops import AtomicOp
+from repro.atomics.table import AtomicTable
+
+
+@dataclasses.dataclass
+class CallSite:
+    """One recorded atomics API call inside the traced function."""
+
+    site: str                          # "execute" | "execute_until"
+    kind: Optional[str] = None         # op kind for execute sites
+    file: Optional[str] = None
+    line: Optional[int] = None
+    site_id: Optional[int] = None      # joins to marker eqn params["site"]
+    table_sharded: bool = False
+    axis_names: Tuple[str, ...] = ()
+    axes_bound: Optional[bool] = None
+    need_fetched: bool = True
+    reverse_ranks: bool = False
+    n: Optional[int] = None
+    uniform_expected: bool = True
+    #: jaxpr Vars for indices/values/expected — filled by the rule engine
+    #: from this site's marker equations (empty when the operands were
+    #: concrete host values)
+    vars: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    #: concrete values for non-traced arguments (host constants)
+    concrete: Dict[str, Any] = dataclasses.field(default_factory=dict)
+    max_rounds: Optional[int] = None   # execute_until sites
+
+
+@dataclasses.dataclass
+class TraceResult:
+    """Everything `rules.run` consumes."""
+
+    closed: Optional[Any]              # ClosedJaxpr, None if trace aborted
+    error: Optional[BaseException]
+    callsites: List[CallSite]
+    table_invars: List[Any]            # jaxpr invars that arrived as tables
+    observer_errors: List[str]
+
+
+def _axis_names(table: AtomicTable) -> Tuple[str, ...]:
+    names: Tuple[str, ...] = ()
+    for group in (table.axis, table.replica_axes):
+        if group:
+            names += (group,) if isinstance(group, str) else tuple(group)
+    return names
+
+
+def _capture_concrete(name: str, x, cs: CallSite) -> None:
+    if x is None or isinstance(x, jax.core.Tracer):
+        return
+    try:
+        cs.concrete[name] = np.asarray(x)
+    except Exception:  # noqa: BLE001 — non-materializable is fine
+        pass
+
+
+def trace(fn, *args, **kwargs) -> TraceResult:
+    """Trace ``fn(*args, **kwargs)`` to a jaxpr under contract observation.
+
+    Arguments may be live arrays or `jax.ShapeDtypeStruct`s (mixing is
+    fine); `AtomicTable` arguments are recognized and their jaxpr invars
+    recorded as table lineage.  Nothing executes on devices.
+    """
+    callsites: List[CallSite] = []
+
+    def observer(site: str, fields: Dict[str, Any]) -> None:
+        if site == "table":
+            return                      # lineage travels via the marker
+        file, line = contracts.caller_site()
+        cs = CallSite(site=site, file=file, line=line,
+                      site_id=fields.get("site_id"))
+        table = fields.get("table")
+        if isinstance(table, AtomicTable):
+            cs.table_sharded = table.is_sharded
+            cs.axis_names = _axis_names(table)
+        if site == "execute":
+            op = fields.get("op")
+            if isinstance(op, AtomicOp):
+                cs.kind = op.kind
+                try:
+                    cs.n = int(op.indices.shape[0])
+                except Exception:  # noqa: BLE001 — polymorphic shapes
+                    pass
+                cs.uniform_expected = bool(op.uniform_expected) \
+                    if op.kind == "cas" else True
+                _capture_concrete("indices", op.indices, cs)
+                _capture_concrete("values", op.values, cs)
+                _capture_concrete("expected", op.expected, cs)
+            cs.need_fetched = bool(fields.get("need_fetched", True))
+            cs.reverse_ranks = bool(fields.get("reverse_ranks", False))
+            cs.axes_bound = fields.get("axes_bound")
+        elif site == "execute_until":
+            cs.max_rounds = fields.get("max_rounds")
+        callsites.append(cs)
+
+    closed = None
+    error: Optional[BaseException] = None
+
+    # trace through a per-call shim, never `fn` itself: jax's trace cache
+    # is keyed on (function identity, avals) but NOT on the contracts
+    # observer, so tracing `fn` directly would (a) replay a stale
+    # marker-free jaxpr if the caller traced `fn` before linting and
+    # (b) leave a marker-bearing jaxpr in the cache for the caller's own
+    # later traces.  The shim is a fresh key each time and dies with it.
+    def _shim(*a, **kw):
+        return fn(*a, **kw)
+
+    with contracts.observe(observer) as errs:
+        try:
+            closed = jax.make_jaxpr(_shim)(*args, **kwargs)
+        except Exception as e:  # noqa: BLE001 — aborted traces are results
+            error = e
+        observer_errors = list(errs)
+
+    table_invars: List[Any] = []
+    if closed is not None:
+        # each flat leaf of (args, kwargs) binds one jaxpr invar, in
+        # flattening order; an AtomicTable is a one-leaf pytree (data)
+        flat, _ = jax.tree_util.tree_flatten(
+            (args, kwargs), is_leaf=lambda x: isinstance(x, AtomicTable))
+        invars = closed.jaxpr.invars
+        for pos, node in enumerate(flat):
+            if isinstance(node, AtomicTable) and pos < len(invars):
+                table_invars.append(invars[pos])
+    return TraceResult(closed=closed, error=error, callsites=callsites,
+                       table_invars=table_invars,
+                       observer_errors=observer_errors)

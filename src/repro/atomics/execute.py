@@ -35,6 +35,7 @@ import jax.numpy as jnp
 
 from repro import telemetry
 from repro.telemetry import core as _tcore
+from repro.atomics import contracts as _contracts
 from repro.atomics.ops import AtomicOp
 from repro.atomics.table import AtomicTable
 from repro.core import rmw as rmw_mod
@@ -216,6 +217,25 @@ _DECISION_CACHE_MAX = 1024
 def _execute_one(table: AtomicTable, op: AtomicOp, *, need_fetched: bool,
                  backend: str, strategy: str, spec,
                  distinct_slots: Optional[int], reverse_ranks: bool):
+    if _contracts._observer is not None:
+        # static analysis in progress: report this call site's contract
+        # BEFORE dispatch (a sharded-outside-shard_map call raises below,
+        # and the analyzer turns the recorded site into the finding), and
+        # route the op's operands through the identity marker primitive so
+        # the rule engine finds them in the final jaxpr — dispatch then
+        # proceeds on the marked (semantically identical) copy
+        sid = _contracts.next_site()
+        roles = ("op_indices", "op_values", "op_expected")
+        children, aux = op.tree_flatten()
+        op = type(op).tree_unflatten(aux, tuple(
+            _contracts.mark(c, role=r, kind=op.kind, site=sid)
+            for c, r in zip(children, roles)))
+        _contracts.notify(
+            "execute", table=table, op=op, site_id=sid,
+            need_fetched=need_fetched, backend=backend, strategy=strategy,
+            distinct_slots=distinct_slots, reverse_ranks=reverse_ranks,
+            axes_bound=(not table.is_sharded)
+            or _axes_bound(_axis_names(table)))
     if not telemetry.enabled():
         return _dispatch_one(table, op, need_fetched=need_fetched,
                              backend=backend, strategy=strategy, spec=spec,

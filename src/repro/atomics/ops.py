@@ -40,6 +40,13 @@ class AtomicOp:
     """Base class: one batch of same-kind RMW ops against one table."""
 
     kind: ClassVar[str] = ""
+    #: Herlihy consensus number of the primitive (arxiv 1802.03844): FAA /
+    #: SWP / MIN / MAX solve 2-process consensus, CAS solves n-process
+    #: (``inf``).  Machine-readable contract annotation the strength lint
+    #: (repro.analysis rule A002) cites: when a CAS batch's update pattern
+    #: is expressible by a consensus-2 primitive, the downgrade is free
+    #: correctness margin — the paper's "pick the simplest correct one".
+    CONSENSUS_NUMBER: ClassVar[float] = 2
     __slots__ = ("indices", "values")
 
     def __init__(self, indices, values):
@@ -119,6 +126,7 @@ class Cas(AtomicOp):
     """
 
     kind: ClassVar[str] = "cas"
+    CONSENSUS_NUMBER: ClassVar[float] = float("inf")
     __slots__ = ("_expected",)
 
     def __init__(self, indices, values, *, expected):

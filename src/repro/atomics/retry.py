@@ -47,6 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import telemetry
+from repro.atomics import contracts as _contracts
 from repro.atomics.ops import OP_KINDS, AtomicOp, Cas
 from repro.atomics.table import AtomicTable
 
@@ -361,6 +362,11 @@ def execute_until(table: Union[AtomicTable, Array],
     pol = _resolve_policy(policy)
     if max_rounds < 1:
         raise ValueError(f"max_rounds must be >= 1, got {max_rounds}")
+    if _contracts._observer is not None:
+        # contract annotation for the analyzer: this loop IS round-bounded
+        # by construction (rule A003's recommended spelling)
+        _contracts.notify("execute_until", table=table,
+                          max_rounds=max_rounds, policy=pol.name)
     if not isinstance(table, AtomicTable):
         table = AtomicTable(table)
     op0 = make_ops(None, None)

@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import sharding as shardlib
+from repro.atomics import contracts as _contracts
 
 Array = jax.Array
 AxisNames = Union[str, Tuple[str, ...]]
@@ -61,6 +62,16 @@ class AtomicTable:
         self.data = data
         self.axis = _norm_axes(axis)
         self.replica_axes = _norm_axes(replica_axes) or ()
+        if _contracts._observer is not None:
+            # fresh constructions only: with_data/tree_unflatten bypass
+            # __init__, so each logical table announces itself once per
+            # trace.  The data is routed through the identity marker
+            # primitive so the final jaxpr carries the table lineage
+            # structurally (trace-internal Vars do not survive jax's
+            # literal-inlining clone); concrete data passes through
+            # unchanged.
+            self.data = _contracts.mark(self.data, role="table")
+            _contracts.notify("table", table=self)
         if self.replica_axes and self.axis is None:
             # replica serialization is a property of the *sharded* executor;
             # accepting it on a local table would silently drop the

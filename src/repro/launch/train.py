@@ -29,6 +29,7 @@ from repro.models.model import build_model
 from repro.optim.adamw import AdamWConfig, init_state
 from repro.runtime.chaos import FaultPlan
 from repro.runtime.fault_tolerance import (FaultConfig, StragglerMonitor,
+                                           declare_donation,
                                            run_with_recovery)
 from repro.sharding import use_mesh
 
@@ -98,6 +99,12 @@ def train(arch: str, *, steps: int = 100, seq_len: int = 256,
                      metrics["grad_norm"], dt)
             history.append({"step": step, **metrics, "sec": dt})
         return params, opt_state
+
+    # donation metadata travels with the callable: the state argument's
+    # buffers are consumed each call (the inner jit donates params+opt), so
+    # recovery and the static linter (rule A004) can verify that the
+    # init_state handed over below is a factory, not a captured value
+    one_step = declare_donation(one_step, (1,))
 
     def save_fn(step: int, state):
         if saver is not None:

@@ -104,6 +104,42 @@ class StragglerMonitor:
                 if m > self.cfg.straggler_threshold * median]
 
 
+class _DonatingStep:
+    """A step callable carrying machine-readable donation metadata.
+
+    jit's C++ ``PjitFunction`` rejects attribute assignment, so the
+    metadata lives on this thin wrapper instead; `declare_donation`
+    constructs it.  The static analyzer (`repro.analysis.check_recovery`,
+    rule A004) and `run_with_recovery`'s startup check read
+    ``donate_argnums`` without tracing.
+    """
+
+    __slots__ = ("fn", "donate_argnums")
+
+    def __init__(self, fn: Callable, donate_argnums: Tuple[int, ...]):
+        self.fn = fn
+        self.donate_argnums = tuple(donate_argnums)
+
+    def __call__(self, *args, **kwargs):
+        return self.fn(*args, **kwargs)
+
+    def __repr__(self) -> str:
+        return (f"_DonatingStep({self.fn!r}, "
+                f"donate_argnums={self.donate_argnums})")
+
+
+def declare_donation(fn: Callable, argnums) -> "_DonatingStep":
+    """Annotate a (jitted) step function with the argnums it donates.
+
+    Purely metadata — the wrapper calls ``fn`` unchanged.  Declaring
+    donation lets rule A004 check the donation/state-factory contract
+    statically instead of at the first post-failure restart.
+    """
+    if isinstance(argnums, int):
+        argnums = (argnums,)
+    return _DonatingStep(fn, tuple(argnums))
+
+
 @dataclass
 class RunResult:
     """Outcome of :func:`run_with_recovery`.
@@ -167,6 +203,20 @@ def run_with_recovery(step_fn: Callable[[int, Any], Any],
     restore itself is retryable the same way.
     """
     plan = chaos if chaos is not None else FaultPlan.from_env()
+    donated = getattr(step_fn, "donate_argnums", None)
+    if donated and not callable(init_state):
+        # the PR-6 bug class, caught at startup: a donating step consumes
+        # the captured buffers on step 0, so every scratch restart would
+        # replay aliased garbage.  Deliberately NOT in the run-local
+        # events trace (RunResult.event_counts is API) — it is a static
+        # property of the call, not a recovery occurrence.
+        telemetry.record("recovery.donation_hazard",
+                         donate_argnums=tuple(donated))
+        log.warning(
+            "step_fn declares donate_argnums=%s but init_state is a "
+            "captured value — pass a zero-arg factory so post-failure "
+            "scratch restarts rebuild fresh buffers (lint rule A004)",
+            tuple(donated))
     t_start = time.monotonic()
     failures = 0
     backoff_total = 0.0

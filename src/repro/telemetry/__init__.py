@@ -28,6 +28,10 @@ Event catalogue (the schema table lives in README "Observability"):
 ``recovery.restore``  one per restore: step resumed from (or scratch)
 ``chaos.fire``        one per injected fault: site, occurrence, step
 ``train.step``        per-step span from `launch.train`: wall_s, step
+``analysis.finding``  one per static-lint finding (`repro.analysis`):
+                      rule, severity, file, line, entry, suppressed
+``recovery.donation_hazard``  startup warning from `run_with_recovery`:
+                      donating step_fn + captured init_state (rule A004)
 ====================  =====================================================
 """
 

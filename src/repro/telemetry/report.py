@@ -29,11 +29,24 @@ def build_report(events: List[Dict[str, Any]], *, spec=None,
     stats = drift_lib.aggregate(events)
     out: Dict[str, Any] = {"n_events": len(events),
                            "events": counters.summary(),
-                           "drift": drift_lib.summarize(stats)}
+                           "drift": drift_lib.summarize(stats),
+                           "analysis": _analysis_rows(events)}
     if fit:
         fitted = drift_lib.fit_spec_update(stats, spec)
         out["spec_update"] = fitted["fields"]
     return out
+
+
+def _analysis_rows(events: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
+    """``analysis.finding`` events -> lint-result rows (repro.analysis)."""
+    rows = []
+    for ev in events:
+        if ev.get("event") != "analysis.finding":
+            continue
+        rows.append({k: ev.get(k) for k in
+                     ("rule", "severity", "file", "line", "entry",
+                      "suppressed", "message")})
+    return rows
 
 
 def _fmt_s(v: float) -> str:
@@ -69,6 +82,18 @@ def render_text(report: Dict[str, Any]) -> str:
                 f"{_fmt_s(r['mean_measured_s']):>9}")
     else:
         lines.append("  (no (predicted_s, measured_s) pairs in the capture)")
+    lint = report.get("analysis") or []
+    lines += ["", "static analysis (analysis.finding events)"]
+    if lint:
+        for r in lint:
+            where = (f"{r['file']}:{r['line']}" if r.get("file")
+                     else "<unknown>")
+            sup = " [suppressed]" if r.get("suppressed") else ""
+            entry = f" [{r['entry']}]" if r.get("entry") else ""
+            sev = (r.get("severity") or "?").upper()
+            lines.append(f"  {where}: {sev} {r.get('rule')}{sup}{entry}")
+    else:
+        lines.append("  (no analysis.finding events in the capture)")
     upd = report.get("spec_update") or {}
     lines += ["", "proposed HardwareSpec correction (fit_spec_update)"]
     if upd:

@@ -1,0 +1,8 @@
+"""Suite-wide fixtures.
+
+`atomics_lint` is re-exported from the analysis pytest integration as a
+plain import (pytest collects fixtures from conftest namespaces), instead
+of the deprecated non-root ``pytest_plugins`` mechanism.
+"""
+
+from repro.analysis.pytest_plugin import atomics_lint  # noqa: F401
