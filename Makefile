@@ -2,9 +2,10 @@ PYTHON ?= python
 # src for the repro package, repo root for the benchmarks package
 export PYTHONPATH := src:.:$(PYTHONPATH)
 
-.PHONY: test test-tier1 test-deprecations test-chaos test-telemetry smoke \
-        bench-rmw bench-rmw-sharded bench-atomics bench-reshard calibrate \
-        bench-telemetry lint-atomics lint-ruff
+.PHONY: test test-tier1 test-deprecations test-chaos test-telemetry \
+        test-tuning smoke bench-rmw bench-rmw-sharded bench-atomics \
+        bench-reshard calibrate bench-telemetry bench-tuning lint-atomics \
+        lint-ruff
 
 # Tier-1 gate + benchmark smoke (what CI runs).
 test: test-tier1 smoke
@@ -51,6 +52,14 @@ test-telemetry:
 	$(PYTHON) -m pytest -q tests/test_telemetry.py \
 	  tests/test_fault_tolerance.py
 
+# Self-tuning lane: the guarded SpecController — live-spec indirection,
+# clamp/hysteresis/deadband guardrails, rollback on induced regression,
+# quarantine of poisoned proposals (spec_perturb chaos site), contention-
+# estimator feeds, tuned-vs-untuned bit-identity (chaos matrix + train
+# metrics), and validated state persistence.
+test-tuning:
+	$(PYTHON) -m pytest -q tests/test_tuning.py tests/test_chaos.py
+
 # Static atomics contract lint (repro.analysis): traces every registered
 # entry point to a jaxpr (no execution) and applies rules A001-A005 —
 # races into AtomicTable buffers, CAS-strength downgrades, unbounded
@@ -80,7 +89,7 @@ SMOKE_TRACE ?= /tmp/repro_smoke_trace.jsonl
 # the captured events — the full observability loop in one make target.
 smoke:
 	$(PYTHON) benchmarks/run.py --fast \
-	  --only latency,bandwidth,rmw_sharded,reshard,fault_recovery,telemetry_drift,analysis
+	  --only latency,bandwidth,rmw_sharded,reshard,fault_recovery,telemetry_drift,analysis,tuning
 	REPRO_TELEMETRY=$(SMOKE_TRACE) $(PYTHON) benchmarks/run.py --fast \
 	  --only latency
 	$(PYTHON) -m repro.telemetry.report $(SMOKE_TRACE)
@@ -108,6 +117,13 @@ bench-reshard:
 # benchmarks/results/telemetry_drift.json.
 bench-telemetry:
 	$(PYTHON) benchmarks/run.py --only telemetry_drift
+
+# Self-tuning gates (convergence under perturbation, rollback latency,
+# quarantine pair, <5% live-controller overhead, tuned-vs-untuned
+# bit-identity incl. the 8-fake-device sharded tier); rewrites
+# benchmarks/results/tuning.json.
+bench-tuning:
+	$(PYTHON) benchmarks/run.py --only tuning
 
 # Fit + persist the container HardwareSpec (results/calibrated_spec.json).
 calibrate:

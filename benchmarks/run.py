@@ -36,6 +36,12 @@ Prints ``name,us_per_call,derived`` CSV rows (see benchmarks/common.Csv).
                                                 registered entry points —
                                                 zero device cost; fails on
                                                 unsuppressed errors)
+  tuning            Guarded self-tuning        (SpecController convergence,
+                                                rollback latency, quarantine
+                                                pair, <5% live-controller
+                                                overhead gate, tuned-vs-
+                                                untuned bit-identity; emits
+                                                results/tuning.json)
 """
 
 from __future__ import annotations
@@ -57,7 +63,7 @@ def main() -> None:
                             model_validation, operand_size,
                             operands_fetched, prefetcher, reshard,
                             rmw_backends, rmw_sharded, roofline,
-                            telemetry_drift, unaligned)
+                            telemetry_drift, tuning, unaligned)
     from benchmarks.common import Csv
     from repro import telemetry
 
@@ -82,6 +88,7 @@ def main() -> None:
         "fault_recovery": lambda c: fault_recovery.run(c, fast=args.fast),
         "telemetry_drift": lambda c: telemetry_drift.run(c, fast=args.fast),
         "analysis": lambda c: analysis_sweep.run(c, fast=args.fast),
+        "tuning": lambda c: tuning.run(c, fast=args.fast),
         "model_validation": model_validation.run,
         "roofline": roofline.run,
     }

@@ -135,6 +135,52 @@ def check_serve_decode() -> List[Finding]:
 
 
 # ---------------------------------------------------------------------------
+# self-tuning (repro.tuning) — controller-wrapped steps stay lint-clean
+# ---------------------------------------------------------------------------
+
+def check_tuning_train_step() -> List[Finding]:
+    """`SpecController.wrap_step` around the donating train step: the
+    wrapper must preserve the donation contract (rule A004) and add no
+    atomics hazards of its own — an unstarted controller's step() is a
+    no-op, so the sweep needs no live stream."""
+    from repro.data.pipeline import DataConfig, synthetic_batch
+    from repro.launch.steps import abstract_train_state, make_train_step
+    from repro.optim.adamw import AdamWConfig
+    from repro.runtime.fault_tolerance import declare_donation
+    from repro.tuning import SpecController
+
+    cfg, model = _reduced_model()
+    opt_cfg = AdamWConfig()
+    params, opt = abstract_train_state(model, opt_cfg)
+    batch = synthetic_batch(
+        DataConfig(seq_len=8, global_batch=2, vocab_size=cfg.vocab_size), 0)
+    ctrl = SpecController()
+    step = ctrl.wrap_step(declare_donation(
+        jax.jit(make_train_step(model, opt_cfg), donate_argnums=(0, 1)),
+        (0, 1)))
+    out = analysis.check(step, params, opt, batch,
+                         entry="tuning.train_step")
+    out += analysis.check_recovery(step, lambda: None,
+                                   entry="tuning.train_step")
+    return out
+
+
+def check_tuning_serve_decode() -> List[Finding]:
+    from repro.tuning import SpecController
+
+    _, model = _reduced_model()
+    params = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0)))
+    batch = {"tokens": _sds((1, 8), jnp.int32)}
+    cache, _ = jax.eval_shape(lambda p, b: model.prefill(p, b, 16), params,
+                              batch)
+    tok = {"tokens": _sds((1, 1), jnp.int32)}
+    ctrl = SpecController()
+    step = ctrl.wrap_step(lambda p, c, b: model.decode_step(p, c, b))
+    return analysis.check(step, params, cache, tok,
+                          entry="tuning.serve_decode")
+
+
+# ---------------------------------------------------------------------------
 # sharded execute (examples/sharded_atomics.py pattern) — A005 coverage
 # ---------------------------------------------------------------------------
 
@@ -167,5 +213,7 @@ ENTRY_POINTS: Dict[str, Callable[[], List[Finding]]] = {
     "train.recovery": check_train_recovery,
     "serve.prefill": check_serve_prefill,
     "serve.decode": check_serve_decode,
+    "tuning.train_step": check_tuning_train_step,
+    "tuning.serve_decode": check_tuning_serve_decode,
     "examples.sharded_atomics": check_examples_sharded,
 }

@@ -13,9 +13,11 @@ Dispatch ladder (all decisions at trace time — shapes are static under jit):
    sort / one-hot / Pallas), `select_exchange` over the exchange strategies
    (one-shot / hierarchical / dense), both overridable via the ``backend=``
    and ``strategy=`` keywords.  ``distinct_slots`` feeds the exchange
-   selector's dynamic contention hint (an observed distinct-slot estimate,
-   e.g. the previous step's counts) to sharpen the one-shot-vs-hierarchical
-   crossover for skewed batches.
+   selector's dynamic contention hint (an observed distinct-slot estimate)
+   to sharpen the one-shot-vs-hierarchical crossover for skewed batches —
+   estimator-backed when a `repro.tuning.SpecController` is active (the
+   retry combinator's collision counts feed an EWMA per call site), with
+   the explicit keyword remaining an optional caller override.
 3. **Semantics** — per-op-expected CAS (non-uniform `Cas`) runs on the
    serialized oracle locally, and across shards via the owner-side oracle
    pass over un-combined ops (see `core.rmw_sharded`).
@@ -265,7 +267,7 @@ def _execute_one(table: AtomicTable, op: AtomicOp, *, need_fetched: bool,
             and jnp.ndim(op.expected) != 0
         key = (op.kind, op.indices.shape[0], data.shape[0], backend,
                strategy, need_fetched, perop, id(spec), distinct_slots,
-               data.dtype)
+               data.dtype, rmw_engine._SPEC_EPOCH)
         fields = _DECISION_CACHE.get(key)
         if fields is None:
             fields = _decision_fields(
@@ -338,6 +340,10 @@ def execute(table: Union[AtomicTable, Array],
       spec: `perf_model.HardwareSpec` override for the cost models.
       distinct_slots: optional observed estimate of distinct slots touched
         per batch — the dynamic contention hint for `select_exchange`.
+        Optional: when a `repro.tuning.SpecController` is running, repeated
+        `execute_until` call sites get this estimate from the contention
+        estimator (EWMA over combine-pass collision counts) automatically;
+        pass it explicitly only to override the measured estimate.
       reverse_ranks: sharded tier only — serialize devices in *descending*
         rank order (the arrival order reversed at every exchange level).
         Combined with locally reversed batches this realizes a globally

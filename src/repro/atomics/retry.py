@@ -185,8 +185,12 @@ def _sharded_round_fn(mesh, axis: Tuple[str, ...], rep: Tuple[str, ...],
     """Build (and cache) the jitted shard_map executing ONE retry round on
     a mesh-sharded table: ops scattered contiguously over device ranks, so
     the device-rank arrival order re-creates the round's batch order."""
+    from repro.core import rmw_engine
+    # the spec epoch invalidates cached rounds when the tuning controller
+    # swaps the live spec: the body bakes its strategy selection at trace
+    # time, so a stale entry would keep dispatching the old choice
     key = (mesh, axis, rep, kind, backend, strategy, id(spec),
-           distinct_slots)
+           distinct_slots, rmw_engine._SPEC_EPOCH)
     fn = _SHARDED_ROUND_CACHE.get(key)
     if fn is not None:
         return fn
@@ -326,6 +330,17 @@ def _exec_round(table: AtomicTable, kind: str, idx: np.ndarray,
 # The combinator
 # ---------------------------------------------------------------------------
 
+def _active_estimator():
+    """The running `repro.tuning` controller's contention estimator, or
+    None.  sys.modules probing (not an import) keeps `repro.atomics` free
+    of the tuning package unless a controller was actually started."""
+    import sys
+    mod = sys.modules.get("repro.tuning.controller")
+    if mod is None:
+        return None
+    return mod.active_estimator()
+
+
 def execute_until(table: Union[AtomicTable, Array],
                   make_ops: Callable, *,
                   max_rounds: int = 16,
@@ -358,6 +373,14 @@ def execute_until(table: Union[AtomicTable, Array],
     Returns a :class:`RetryResult`; ``success`` is all-True iff every op
     resolved within the budget, and ``rounds`` is the per-op contention
     observable (attempts until success).
+
+    ``distinct_slots`` (the exchange selector's contention hint) is
+    estimator-backed: when a `repro.tuning.SpecController` is running and
+    the caller passes None, the hint comes from the contention estimator's
+    EWMA over this call site's observed collision counts (round-0 distinct
+    slots + CAS round-histogram winners).  Passing an explicit value
+    overrides the estimator; without a controller, None means no hint —
+    exactly the pre-tuning behavior.
     """
     pol = _resolve_policy(policy)
     if max_rounds < 1:
@@ -377,6 +400,20 @@ def execute_until(table: Union[AtomicTable, Array],
             f"atomics.Cas(indices, values, expected=...)")
     kind = op0.kind
     n = int(op0.indices.shape[0])
+    # contention estimator (repro.tuning): when a controller is running
+    # and the caller passed no hint, serve the site's EWMA'd observed
+    # distinct-slot count as the exchange selector's contention hint —
+    # "estimator-backed, hint optional".  Selection-only, like the hint
+    # itself: it can never change results.
+    est = _active_estimator()
+    est_key = None
+    if est is not None:
+        from repro.tuning.estimator import site_key
+        est_key = site_key(kind,
+                           "sharded" if table.is_sharded else "local",
+                           int(table.data.shape[0]), n)
+        if distinct_slots is None and table.is_sharded:
+            distinct_slots = est.hint(est_key)
     tbl_dtype = np.asarray(jnp.zeros((), table.data.dtype)).dtype
     slots = np.asarray(op0.indices, np.int32).copy()
     values = np.asarray(op0.values, tbl_dtype).copy()
@@ -428,6 +465,15 @@ def execute_until(table: Union[AtomicTable, Array],
                     expected[pending] = observed[pending]
         k = max(1, min(pol.batch_size(len(pending), rnd), len(pending)))
         issue, defer = pending[:k], pending[k:]
+        if rnd == 0 and (est is not None or telemetry.enabled()):
+            # the combine pass's collision count, exactly: the slots are
+            # host numpy already, so the round-0 distinct-slot count is
+            # one np.unique away — the estimator's primary observation
+            distinct_obs = int(np.unique(slots[issue]).size)
+            if est is not None:
+                est.update(est_key, distinct_obs)
+        else:
+            distinct_obs = None
         t0 = time.perf_counter()
         table, fetched, ok, info = _exec_round(
             table, kind, slots[issue], values[issue],
@@ -435,6 +481,8 @@ def execute_until(table: Union[AtomicTable, Array],
             backend=backend, strategy=strategy, spec=spec,
             distinct_slots=distinct_slots)
         if info is not None:
+            if distinct_obs is not None:
+                info["distinct_observed"] = distinct_obs
             # one event per retry round: the pending-count trajectory is
             # the contention signal the ROADMAP's adaptive estimator needs,
             # and (predicted_s, measured_s) feed the exchange-tier drift
@@ -454,6 +502,12 @@ def execute_until(table: Union[AtomicTable, Array],
         pending = np.concatenate([issue[~ok], defer])
         n_rounds += 1
 
+    if est is not None and is_cas and n_rounds >= 1:
+        # the round histogram's second observation of the same quantity:
+        # ops resolved on their FIRST attempt = one winner per contended
+        # slot + every uncontended op = distinct slots among the issued
+        # batch (CAS only — weaker ops resolve in one round regardless)
+        est.update(est_key, int(((rounds == 1) & success).sum()))
     if telemetry.enabled():
         # rounds[i] = attempts op i took; bincount over it is the per-call
         # contention histogram (index = attempt count, 0 = never issued)

@@ -385,14 +385,61 @@ def calibrated_spec_path() -> str:
 
 _SPEC_CACHE: Dict[str, perf_model.HardwareSpec] = {}
 
+# Process-wide "live spec" override (`repro.tuning.SpecController` installs
+# its tuned spec here).  All three selector tiers default their spec through
+# `default_spec()`, so this single indirection swaps the active cost model
+# everywhere at once.  The epoch counter is bumped on every swap; decision
+# caches keyed on it (atomics.execute, atomics.retry) invalidate themselves
+# the moment a new spec lands.  The spec only ever steers *selection* —
+# every backend/strategy is bit-identical to the serialized oracle — so a
+# live swap can never change results, only which implementation runs.
+_LIVE_SPEC: Optional[perf_model.HardwareSpec] = None
+_SPEC_EPOCH: int = 0
+
 
 def _reset_spec_cache() -> None:  # test hook
     _SPEC_CACHE.clear()
 
 
-def default_spec() -> perf_model.HardwareSpec:
-    """Platform spec: TPU constants on TPU; on CPU the calibrated spec from
-    `benchmarks/calibrate.py` when present (falling back to the priors)."""
+def set_live_spec(spec: perf_model.HardwareSpec) -> int:
+    """Install ``spec`` as the process-wide selection cost model and return
+    the new spec epoch.  Takes effect for every subsequent `default_spec()`
+    call across all tiers; previously jitted/cached computations keep the
+    selection they were traced with (documented staleness — re-tracing picks
+    up the new spec)."""
+    global _LIVE_SPEC, _SPEC_EPOCH
+    if not isinstance(spec, perf_model.HardwareSpec):
+        raise TypeError(f"live spec must be a HardwareSpec, got {type(spec)}")
+    _LIVE_SPEC = spec
+    _SPEC_EPOCH += 1
+    return _SPEC_EPOCH
+
+
+def clear_live_spec() -> None:
+    """Drop the live override; `default_spec()` reverts to the calibrated
+    platform spec.  Bumps the epoch so decision caches refresh."""
+    global _LIVE_SPEC, _SPEC_EPOCH
+    if _LIVE_SPEC is not None:
+        _LIVE_SPEC = None
+        _SPEC_EPOCH += 1
+
+
+def live_spec() -> Optional[perf_model.HardwareSpec]:
+    """The installed live override, or None when untuned."""
+    return _LIVE_SPEC
+
+
+def spec_epoch() -> int:
+    """Monotonic counter bumped on every live-spec install/clear.  Decision
+    caches include it in their keys so spec swaps invalidate stale entries."""
+    return _SPEC_EPOCH
+
+
+def calibrated_spec() -> perf_model.HardwareSpec:
+    """Platform spec ignoring any live-tuned override: TPU constants on TPU;
+    on CPU the calibrated spec from `benchmarks/calibrate.py` when present
+    (falling back to the priors).  This is the envelope anchor the tuning
+    controller validates live proposals against."""
     backend = jax.default_backend()
     if backend in _SPEC_CACHE:
         return _SPEC_CACHE[backend]
@@ -414,6 +461,15 @@ def default_spec() -> perf_model.HardwareSpec:
             pass  # unreadable calibration files must never break dispatch
     _SPEC_CACHE[backend] = spec
     return spec
+
+
+def default_spec() -> perf_model.HardwareSpec:
+    """The spec every selector tier uses when the caller passes none: the
+    live-tuned override when a `repro.tuning.SpecController` has installed
+    one, else the calibrated platform spec."""
+    if _LIVE_SPEC is not None:
+        return _LIVE_SPEC
+    return calibrated_spec()
 
 
 class Selection(NamedTuple):

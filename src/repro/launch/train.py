@@ -43,12 +43,20 @@ def train(arch: str, *, steps: int = 100, seq_len: int = 256,
           microbatches: int = 1, log_every: int = 10,
           failure_injector=None, seed: int = 0,
           remat_policy: str = "none",
-          chaos: Optional[FaultPlan] = None) -> Dict[str, Any]:
+          chaos: Optional[FaultPlan] = None,
+          tuning=None) -> Dict[str, Any]:
     """Returns final metrics dict.  Deterministic given (arch, seed, steps)
     — including under an injected fault schedule (`chaos`, or the
     ``REPRO_CHAOS`` env hook when None): recovery restores the latest
     *valid* checkpoint and replays, so the final state is bit-equal to a
-    fault-free run."""
+    fault-free run.
+
+    ``tuning``: a started-or-not `repro.tuning.SpecController`, True for a
+    default one, or None to consult the ``REPRO_TUNING`` env hook.  The
+    controller is stepped once per training step (guarded live-spec
+    updates from the run's own drift telemetry) and stopped on exit; the
+    spec steers dispatch selection only, so tuned metrics/losses stay
+    bit-equal to untuned runs."""
     cfg = get_reduced(arch) if reduced else get_config(arch)
     model = build_model(cfg, attn_impl="chunked", remat_policy=remat_policy,
                         loss_chunk=2048)
@@ -106,6 +114,12 @@ def train(arch: str, *, steps: int = 100, seq_len: int = 256,
     # init_state handed over below is a factory, not a captured value
     one_step = declare_donation(one_step, (1,))
 
+    controller = _resolve_tuning(tuning)
+    if controller is not None:
+        controller.start()
+        # wrap_step preserves the donation metadata declared above
+        one_step = controller.wrap_step(one_step)
+
     def save_fn(step: int, state):
         if saver is not None:
             saver.save_async(step, {"params": state[0], "opt": state[1]},
@@ -139,17 +153,36 @@ def train(arch: str, *, steps: int = 100, seq_len: int = 256,
     if mesh is not None:
         from repro.runtime.elastic import reshard_tables
         reshard_fn = lambda s: reshard_tables(s, mesh)  # noqa: E731
-    with ctx:
-        result = run_with_recovery(one_step, fresh_state, steps,
-                                   fault_cfg, save_fn, restore_fn,
-                                   failure_injector=failure_injector,
-                                   reshard_fn=reshard_fn, chaos=chaos)
+    try:
+        with ctx:
+            result = run_with_recovery(one_step, fresh_state, steps,
+                                       fault_cfg, save_fn, restore_fn,
+                                       failure_injector=failure_injector,
+                                       reshard_fn=reshard_fn, chaos=chaos)
+    finally:
+        if controller is not None:
+            controller.stop()        # detach, clear live spec, persist
     if saver is not None:
         saver.wait()
-    return {"history": history, "steps_done": result.steps_done,
-            "failures": result.failures,
-            "backoff_total_s": result.backoff_total_s,
-            "final_loss": history[-1]["loss"] if history else None}
+    out = {"history": history, "steps_done": result.steps_done,
+           "failures": result.failures,
+           "backoff_total_s": result.backoff_total_s,
+           "final_loss": history[-1]["loss"] if history else None}
+    if controller is not None:
+        out["tuning"] = controller.stats()
+    return out
+
+
+def _resolve_tuning(tuning):
+    """None → the REPRO_TUNING env hook; True → a default controller;
+    a SpecController instance passes through."""
+    if tuning is None:
+        from repro.tuning import from_env
+        return from_env()
+    if tuning is True:
+        from repro.tuning import SpecController
+        return SpecController()
+    return tuning
 
 
 class _null_ctx:
@@ -180,6 +213,13 @@ def main() -> None:
                     help="'ring' or a JSONL path: enable the repro.telemetry "
                          "event stream (same as REPRO_TELEMETRY); render a "
                          "capture with `python -m repro.telemetry.report`")
+    ap.add_argument("--tuning", nargs="?", const="on", default=None,
+                    metavar="STATE",
+                    help="run under a repro.tuning.SpecController (guarded "
+                         "live HardwareSpec updates from the run's own "
+                         "drift telemetry); optional value = state file the "
+                         "tuned spec persists/restores through (same as "
+                         "REPRO_TUNING)")
     ap.add_argument("--profile-annotations", action="store_true",
                     help="open jax.profiler.TraceAnnotation regions around "
                          "steps and atomics dispatch (needs --telemetry)")
@@ -191,11 +231,17 @@ def main() -> None:
     else:
         telemetry.enable_from_env()
     chaos = FaultPlan.from_spec(args.chaos) if args.chaos else None
+    tuning = None
+    if args.tuning is not None:
+        from repro.tuning import SpecController
+        tuning = SpecController(
+            state_path=None if args.tuning == "on" else args.tuning)
     try:
         out = train(args.arch, steps=args.steps, seq_len=args.seq_len,
                     global_batch=args.global_batch, reduced=not args.full,
                     ckpt_dir=args.ckpt_dir, lr=args.lr,
-                    microbatches=args.microbatches, chaos=chaos)
+                    microbatches=args.microbatches, chaos=chaos,
+                    tuning=tuning)
     finally:
         if telemetry.enabled():
             telemetry.disable()      # flush/close the JSONL capture

@@ -8,13 +8,16 @@ mid-reshard failures bit-identically?".  This module replaces that with a
 :class:`FaultPlan`: one seed deterministically schedules faults at named
 **sites** of the recovery loop, with per-site probability/count knobs.
 
-Sites (visited by ``run_with_recovery`` in loop order)::
+Sites (the first five are visited by ``run_with_recovery`` in loop order;
+``spec_perturb`` belongs to the tuning controller's update cycle)::
 
     straggler_delay   before a step: injected stall (sleeps, never raises)
     step              the step body: raises ChaosError (chip loss analogue)
     ckpt_save         before save_fn: a save that never lands
     ckpt_restore      before restore_fn: a restore attempt that dies
     reshard           before reshard_fn: elastic migration failure
+    spec_perturb      tuning update cycle: poison the live HardwareSpec /
+                      skew the drift window (`repro.tuning.SpecController`)
 
 Determinism contract: whether visit ``k`` of site ``s`` fires is a pure
 function of ``(seed, s, k)`` — every site draws from its own independent
@@ -42,8 +45,13 @@ import numpy as np
 
 log = logging.getLogger("repro.runtime")
 
-#: the named fault sites of the recovery loop, in visit order
-SITES = ("straggler_delay", "step", "ckpt_save", "ckpt_restore", "reshard")
+#: the fault sites of the recovery loop, in `run_with_recovery` visit order
+RECOVERY_SITES = ("straggler_delay", "step", "ckpt_save", "ckpt_restore",
+                  "reshard")
+
+#: all named fault sites: the recovery loop's plus the tuning controller's
+#: spec-poisoning site (visited once per `SpecController` update cycle)
+SITES = RECOVERY_SITES + ("spec_perturb",)
 
 #: env var consumed by FaultPlan.from_env (see module docstring for syntax)
 CHAOS_ENV = "REPRO_CHAOS"
@@ -165,6 +173,20 @@ class FaultPlan:
         if hit:
             self._fired[site] += 1
         return hit
+
+    def param(self, site: str) -> float:
+        """Deterministic fault *parameter* in [0, 1) for the most recent
+        visit of ``site`` — an independent stream from the fire decision
+        (tag 1 vs the implicit fire draw), so reading a parameter never
+        perturbs the schedule.  The tuning controller maps it onto the
+        perturbation shape (skew factor vs poison kind) for the
+        ``spec_perturb`` site."""
+        if site not in SITES:
+            raise ValueError(f"unknown fault site {site!r}; have {SITES}")
+        visit = max(0, self._visits[site] - 1)
+        seq = np.random.SeedSequence(
+            [self.seed, SITES.index(site), visit, 1])
+        return float(np.random.default_rng(seq).random())
 
     def visit(self, site: str, *, step: Optional[int] = None) -> None:
         """The recovery loop's hook: raise :class:`ChaosError` when the

@@ -148,6 +148,12 @@ class RunResult:
     ``recovery.fault`` / ``recovery.backoff`` / ``recovery.restore``
     occurrence, in order, always populated (telemetry enabled or not) so
     tests and callers assert on fields instead of parsing log text.
+
+    ``telemetry_ring`` is the last-N global event stream at run end when a
+    `telemetry.RingBuffer` sink is installed (``REPRO_TELEMETRY=ring``) —
+    empty otherwise.  The same snapshot is flushed to disk on the fatal
+    fault path (`telemetry.flush_ring`), so ring captures no longer vanish
+    exactly when the run dies.
     """
 
     steps_done: int
@@ -155,6 +161,7 @@ class RunResult:
     restored_from: List[int] = field(default_factory=list)
     backoff_total_s: float = 0.0
     events: List[dict] = field(default_factory=list)
+    telemetry_ring: List[dict] = field(default_factory=list)
 
     def event_counts(self) -> dict:
         counts: dict = {}
@@ -229,6 +236,15 @@ def run_with_recovery(step_fn: Callable[[int, Any], Any],
         events.append({"event": event, **fields})
         telemetry.record(event, **fields)
 
+    def _flush_ring(reason: str) -> None:
+        # the fault is about to propagate out of the recovery loop: land
+        # the last-N ring events (REPRO_TELEMETRY=ring) on disk next to
+        # the recovery.fault event before the process likely dies.
+        # flush_ring is a no-op without a ring sink and never raises.
+        n = telemetry.flush_ring()
+        if n:
+            log.error("flushed %d telemetry ring events (%s)", n, reason)
+
     def _absorb(e: BaseException, what: str) -> None:
         """Count a failure; re-raise fatal/over-budget, else back off."""
         nonlocal failures, backoff_total
@@ -237,6 +253,7 @@ def run_with_recovery(step_fn: Callable[[int, Any], Any],
                   message=str(e), attempt=failures + 1, fatal=True)
             log.error("%s failed with fatal %s: %s — not retrying",
                       what, type(e).__name__, e)
+            _flush_ring(f"fatal fault at {what}")
             raise e
         failures += 1
         _emit("recovery.fault", site=what, error=type(e).__name__,
@@ -245,9 +262,11 @@ def run_with_recovery(step_fn: Callable[[int, Any], Any],
         log.warning("%s failed (%s: %s); recovery %d/%d", what,
                     type(e).__name__, e, failures, cfg.max_failures)
         if failures > cfg.max_failures:
+            _flush_ring(f"failure budget exhausted at {what}")
             raise e
         elapsed = time.monotonic() - t_start
         if cfg.deadline_s is not None and elapsed > cfg.deadline_s:
+            _flush_ring(f"recovery deadline exceeded at {what}")
             raise TimeoutError(
                 f"recovery deadline {cfg.deadline_s:.3f}s exceeded "
                 f"({elapsed:.3f}s elapsed, {failures} failures); "
@@ -312,4 +331,5 @@ def run_with_recovery(step_fn: Callable[[int, Any], Any],
             step, state = _recover("restore")
     return RunResult(steps_done=step, failures=failures,
                      restored_from=restored,
-                     backoff_total_s=backoff_total, events=events)
+                     backoff_total_s=backoff_total, events=events,
+                     telemetry_ring=telemetry.ring_events())

@@ -32,18 +32,34 @@ Event catalogue (the schema table lives in README "Observability"):
                       rule, severity, file, line, entry, suppressed
 ``recovery.donation_hazard``  startup warning from `run_with_recovery`:
                       donating step_fn + captured init_state (rule A004)
+``tuning.apply``      one per live-spec swap by `repro.tuning`: fields
+                      changed (from/to/ratio), drift score, window size
+``tuning.rollback``   controller reverted to the last-good spec: the
+                      post-swap drift score that triggered it
+``tuning.quarantine`` pathological proposal rejected (NaN/negative/
+                      out-of-envelope): field, value, reason — never silent
+``tuning.skip``       update cycle that applied nothing: reason
+                      (cooldown/deadband/no_fields) + any skipped fields
+``tuning.confirm``    post-swap window showed no regression: swap kept
+``tuning.restore``    persisted tuned spec validated+reinstalled (or
+                      rejected) at controller start
+``tuning.perturb``    spec_perturb chaos fired inside the update cycle:
+                      kind (skew/poison) + deterministic parameter
 ====================  =====================================================
 """
 
 from repro.telemetry.core import (Counters, JsonlWriter, RingBuffer, Sink,
-                                  Span, annotation, annotations_enabled,
-                                  capture, disable, enable, enable_from_env,
-                                  enabled, read_jsonl, record, record_event,
+                                  Span, add_sink, annotation,
+                                  annotations_enabled, capture, disable,
+                                  enable, enable_from_env, enabled,
+                                  flush_ring, read_jsonl, record,
+                                  record_event, remove_sink, ring_events,
                                   sinks, span, sync_enabled, TELEMETRY_ENV)
 
 __all__ = [
     "Counters", "JsonlWriter", "RingBuffer", "Sink", "Span",
-    "annotation", "annotations_enabled", "capture", "disable", "enable",
-    "enable_from_env", "enabled", "read_jsonl", "record", "record_event",
-    "sinks", "span", "sync_enabled", "TELEMETRY_ENV",
+    "add_sink", "annotation", "annotations_enabled", "capture", "disable",
+    "enable", "enable_from_env", "enabled", "flush_ring", "read_jsonl",
+    "record", "record_event", "remove_sink", "ring_events", "sinks",
+    "span", "sync_enabled", "TELEMETRY_ENV",
 ]

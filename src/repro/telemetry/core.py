@@ -235,6 +235,44 @@ def disable() -> None:
         _annotate = False
 
 
+def add_sink(sink: Sink, *, sync: Optional[bool] = None,
+             annotate: Optional[bool] = None) -> None:
+    """Attach ``sink`` *alongside* any installed sinks and turn the stream
+    on (contrast `enable`, which replaces the sink set).  ``sync``/
+    ``annotate`` only ever widen the current flags — a live consumer (the
+    tuning controller) must not silently strip another consumer's settings.
+    Pair with `remove_sink`."""
+    global _sinks, _enabled, _sync, _annotate
+    with _lock:
+        if sink not in _sinks:
+            _sinks = _sinks + (sink,)
+        if sync is not None:
+            _sync = _sync or bool(sync)
+        if annotate is not None:
+            _annotate = _annotate or bool(annotate)
+        _enabled = True
+
+
+def remove_sink(sink: Sink, *, close: bool = False) -> bool:
+    """Detach one sink installed via `add_sink`/`enable`.  When the last
+    sink goes, the stream turns fully off (flags reset).  Returns True if
+    the sink was installed."""
+    global _sinks, _enabled, _sync, _annotate
+    with _lock:
+        had = any(s is sink for s in _sinks)
+        _sinks = tuple(s for s in _sinks if s is not sink)
+        if not _sinks:
+            _enabled = False
+            _sync = False
+            _annotate = False
+    if had and close:
+        try:
+            sink.close()
+        except Exception:  # noqa: BLE001 — teardown must not raise
+            pass
+    return had
+
+
 def sinks() -> Tuple[Sink, ...]:
     return _sinks
 
@@ -334,13 +372,82 @@ def annotation(name: str):
     return jax.profiler.TraceAnnotation(name)
 
 
+# ---------------------------------------------------------------------------
+# Ring crash-flush: REPRO_TELEMETRY=ring keeps the last N events in memory —
+# which used to mean they vanished exactly when they mattered (a crash).
+# `enable_from_env` now registers an atexit flush (atexit runs on unhandled-
+# exception exits too), and `runtime.fault_tolerance` calls `flush_ring`
+# on the fatal-fault path so the last-N events land next to the
+# `recovery.fault` event.
+# ---------------------------------------------------------------------------
+
+#: default JSONL path the ring is flushed to (cwd); override with
+#: ``REPRO_TELEMETRY=ring:/path/to/flush.jsonl``
+RING_FLUSH_DEFAULT = "repro_telemetry_ring.jsonl"
+
+_ring_flush_path: Optional[str] = None   # set by enable_from_env("ring[:p]")
+_atexit_registered = False
+
+
+def ring_events() -> List[Dict[str, Any]]:
+    """Snapshot of every installed RingBuffer sink's events (oldest first,
+    concatenated across rings).  Empty when no ring sink is installed —
+    callers (`run_with_recovery` attaching the tail to `RunResult`) need no
+    mode check."""
+    return [ev for s in _sinks if isinstance(s, RingBuffer)
+            for ev in s.events]
+
+
+def flush_ring(path: Optional[str] = None) -> int:
+    """Write the current ring snapshot to ``path`` (default: the
+    ``ring:<path>`` target from ``REPRO_TELEMETRY``, else
+    ``RING_FLUSH_DEFAULT`` in the working directory) as JSONL readable by
+    `read_jsonl`.  Returns the number of events written; 0 (and no file
+    touched) when no ring sink is installed or the ring is empty.  Never
+    raises — this runs on crash paths."""
+    evs = ring_events()
+    if not evs:
+        return 0
+    target = path or _ring_flush_path or RING_FLUSH_DEFAULT
+    try:
+        with open(target, "w") as f:
+            for ev in evs:
+                f.write(json.dumps(
+                    {k: _jsonable(v) for k, v in ev.items()}) + "\n")
+    except Exception:  # noqa: BLE001 — a failing flush must not mask the
+        return 0       # fault that triggered it
+    return len(evs)
+
+
+def _flush_ring_atexit() -> None:
+    n = flush_ring()
+    if n:
+        import logging
+        logging.getLogger("repro.telemetry").info(
+            "flushed %d ring events to %s", n,
+            _ring_flush_path or RING_FLUSH_DEFAULT)
+
+
 def enable_from_env() -> bool:
-    """The ``REPRO_TELEMETRY`` hook: ``"ring"`` installs a RingBuffer,
-    anything else is treated as a JSONL output path.  Returns True when the
-    stream was enabled.  Called by `launch.train` so unmodified training
-    invocations can be instrumented from the environment."""
+    """The ``REPRO_TELEMETRY`` hook: ``"ring"`` installs a RingBuffer
+    (``"ring:/path.jsonl"`` names where the crash/atexit flush lands —
+    default `RING_FLUSH_DEFAULT`), anything else is treated as a JSONL
+    output path.  Ring mode registers an atexit flush so the last-N events
+    survive a crash.  Returns True when the stream was enabled.  Called by
+    `launch.train` so unmodified training invocations can be instrumented
+    from the environment."""
+    global _ring_flush_path, _atexit_registered
     target = os.environ.get(TELEMETRY_ENV, "").strip()
     if not target:
         return False
-    enable(RingBuffer() if target == "ring" else JsonlWriter(target))
+    if target == "ring" or target.startswith("ring:"):
+        _, _, flush_to = target.partition(":")
+        _ring_flush_path = flush_to.strip() or None
+        enable(RingBuffer())
+        if not _atexit_registered:
+            import atexit
+            atexit.register(_flush_ring_atexit)
+            _atexit_registered = True
+    else:
+        enable(JsonlWriter(target))
     return True

@@ -147,8 +147,17 @@ SPEC_FIELD_OF = {
 MIN_SAMPLES = 3
 
 
+def _min_samples_for(name: str, min_samples) -> int:
+    """Per-field sample floor: an int applies to every field; a mapping is
+    consulted per field name with ``"*"`` as its default (falling back to
+    `MIN_SAMPLES`)."""
+    if isinstance(min_samples, int):
+        return min_samples
+    return int(min_samples.get(name, min_samples.get("*", MIN_SAMPLES)))
+
+
 def fit_spec_update(stats: Dict[Key, DriftStat], spec=None, *,
-                    min_samples: int = MIN_SAMPLES) -> Dict[str, Any]:
+                    min_samples=MIN_SAMPLES) -> Dict[str, Any]:
     """Turn per-group drift into proposed `HardwareSpec` constants.
 
     Groups mapping to the same field pool their log-ratios (sample-count
@@ -159,9 +168,17 @@ def fit_spec_update(stats: Dict[Key, DriftStat], spec=None, *,
     crossover points care about, so a multiplicative residual on the total
     is (to first order) a multiplicative residual on that constant — the
     same reasoning the paper uses to read Table 2 constants off median
-    latencies.  Returns::
+    latencies.
+
+    ``min_samples`` is either one int floor for every field, or a mapping
+    ``{field_name: floor}`` (key ``"*"`` sets the default) — the tuning
+    controller uses per-field floors to demand more evidence for
+    high-blast-radius constants.  Fields *below* their floor are no longer
+    silently dropped: they come back under ``"skipped"`` so reports and the
+    controller can surface them.  Returns::
 
         {"fields": {name: {"current", "proposed", "ratio", "n"}},
+         "skipped": {name: {"n", "min_samples"} | {"reason": ...}},
          "spec": <HardwareSpec with proposals applied>}
     """
     if spec is None:
@@ -174,17 +191,22 @@ def fit_spec_update(stats: Dict[Key, DriftStat], spec=None, *,
             continue
         pools.setdefault(target, []).extend([st.log_sum / st.n] * st.n)
     fields: Dict[str, Dict[str, float]] = {}
+    skipped: Dict[str, Dict[str, Any]] = {}
     updates: Dict[str, float] = {}
     for (name, sense), logs in pools.items():
-        if len(logs) < min_samples:
+        floor = _min_samples_for(name, min_samples)
+        if len(logs) < floor:
+            skipped[name] = {"n": len(logs), "min_samples": floor}
             continue
         ratio = math.exp(sum(logs) / len(logs))
         current = float(getattr(spec, name, 0.0) or 0.0)
         if current <= 0.0:
+            skipped[name] = {"n": len(logs), "min_samples": floor,
+                             "reason": "field unset on spec"}
             continue
         proposed = current * ratio if sense == "direct" else current / ratio
         fields[name] = {"current": current, "proposed": proposed,
                         "ratio": ratio, "n": len(logs)}
         updates[name] = proposed
     new_spec = dataclasses.replace(spec, **updates) if updates else spec
-    return {"fields": fields, "spec": new_spec}
+    return {"fields": fields, "skipped": skipped, "spec": new_spec}

@@ -34,6 +34,7 @@ def build_report(events: List[Dict[str, Any]], *, spec=None,
     if fit:
         fitted = drift_lib.fit_spec_update(stats, spec)
         out["spec_update"] = fitted["fields"]
+        out["spec_update_skipped"] = fitted["skipped"]
     return out
 
 
@@ -103,6 +104,14 @@ def render_text(report: Dict[str, Any]) -> str:
                          f"n={f['n']})")
     else:
         lines.append("  (not enough drift samples)")
+    skipped = report.get("spec_update_skipped") or {}
+    if skipped:
+        # no silent caps: fields with drift evidence below their sample
+        # floor are listed, not dropped
+        for name, s in sorted(skipped.items()):
+            why = s.get("reason") or (f"n={s['n']} < "
+                                      f"min_samples={s['min_samples']}")
+            lines.append(f"  {name}: skipped ({why})")
     return "\n".join(lines)
 
 

@@ -1,0 +1,35 @@
+"""`repro.tuning` — guarded self-tuning of the HardwareSpec cost model.
+
+The feedback loop the ROADMAP's self-tuning item asked for, in its robust
+form:
+
+* :class:`SpecController` — folds the live telemetry drift window into the
+  active `HardwareSpec` on a cadence and swaps it into all three selector
+  tiers through `rmw_engine.set_live_spec`, behind clamp / hysteresis /
+  rollback / quarantine guardrails and validated persistence
+  (`repro.tuning.controller`).
+* :class:`ContentionEstimator` — EWMA ``distinct_slots`` inference per
+  repeated call site, fed by `execute_until`'s collision counts and round
+  histograms, consulted automatically when the caller passes no hint
+  (`repro.tuning.estimator`).
+* ``spec_perturb`` — the chaos site (`runtime.chaos`) that poisons the
+  live spec / skews drift samples inside the update cycle; the chaos suite
+  asserts convergence-back, rollback, and tuned-vs-untuned bit-identity.
+
+The one invariant everything here leans on: the spec and the estimator
+steer **selection only** — every backend/strategy is bit-identical to the
+serialized oracle, so a tuned run's results are bit-equal to an untuned
+run's, always.
+"""
+
+from repro.tuning.controller import (TUNABLE_FIELDS, TUNING_ENV,
+                                     SpecController, TuningConfig,
+                                     active_controller, active_estimator,
+                                     from_env)
+from repro.tuning.estimator import ContentionEstimator, SiteKey, site_key
+
+__all__ = [
+    "TUNABLE_FIELDS", "TUNING_ENV", "SpecController", "TuningConfig",
+    "active_controller", "active_estimator", "from_env",
+    "ContentionEstimator", "SiteKey", "site_key",
+]

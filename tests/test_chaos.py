@@ -14,7 +14,8 @@ import pytest
 
 from repro import atomics
 from repro.checkpoint import ckpt
-from repro.runtime.chaos import (CHAOS_ENV, SITES, ChaosError, FaultPlan,
+from repro.runtime.chaos import (CHAOS_ENV, RECOVERY_SITES, SITES,
+                                 ChaosError, FaultPlan,
                                  SiteSpec)
 from repro.runtime.fault_tolerance import FaultConfig, run_with_recovery
 
@@ -199,10 +200,12 @@ def test_chaos_matrix_bit_equal_to_fault_free(tmp_path):
 
 
 def test_chaos_all_sites_are_wired():
-    """Every named site is visited by run_with_recovery: prob=1@1 at each
-    site (one at a time) must produce exactly one absorbed failure (or one
-    stall for straggler_delay)."""
-    for site in SITES:
+    """Every recovery-loop site is visited by run_with_recovery: prob=1@1
+    at each site (one at a time) must produce exactly one absorbed failure
+    (or one stall for straggler_delay).  ``spec_perturb`` is the tuning
+    controller's site, covered by tests/test_tuning.py."""
+    assert set(SITES) == set(RECOVERY_SITES) | {"spec_perturb"}
+    for site in RECOVERY_SITES:
         plan = FaultPlan(0, {site: SiteSpec(prob=1.0, count=1,
                                             delay_s=1e-4)})
         # a pre-existing checkpoint so startup takes the restore+adopt

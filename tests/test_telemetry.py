@@ -326,6 +326,33 @@ def test_fit_spec_update_needs_min_samples():
     assert out["fields"] == {}
 
 
+def test_fit_spec_update_per_field_floors_and_skipped():
+    from repro.core.perf_model import cpu_default_spec
+    spec = cpu_default_spec()
+    evs = ([_ev("local", "serialized", "cas", 8, 1e-5, 2e-5)] * 5 +
+           [_ev("local", "sort", "faa", 64, 1e-4, 3e-4)] * 2)
+    stats = drift.aggregate(evs)
+    # mapping floors: "*" default + a per-field override
+    out = drift.fit_spec_update(stats, spec,
+                                min_samples={"*": 2, "loop_step_s": 6})
+    assert "sort_elem_pass_s" in out["fields"]          # 2 >= "*": 2
+    assert out["skipped"]["loop_step_s"] == {"n": 5, "min_samples": 6}
+    # an int floor still applies uniformly
+    out2 = drift.fit_spec_update(stats, spec, min_samples=3)
+    assert "loop_step_s" in out2["fields"]
+    assert out2["skipped"]["sort_elem_pass_s"] == {"n": 2, "min_samples": 3}
+
+
+def test_fit_spec_update_skips_unset_fields_with_reason():
+    import dataclasses
+    from repro.core.perf_model import cpu_default_spec
+    spec = dataclasses.replace(cpu_default_spec(), loop_step_s=0.0)
+    evs = [_ev("local", "serialized", "cas", 8, 1e-5, 2e-5)] * 4
+    out = drift.fit_spec_update(drift.aggregate(evs), spec, min_samples=2)
+    assert out["fields"] == {}
+    assert out["skipped"]["loop_step_s"]["reason"] == "field unset on spec"
+
+
 def test_report_build(tmp_path):
     from repro.telemetry.report import build_report, render_text
     evs = [_ev("local", "sort", "faa", 64, 1e-4, 2e-4)] * 3
@@ -340,6 +367,124 @@ def test_report_build(tmp_path):
     assert row["ratio"] == pytest.approx(2.0)
     text = render_text(report)
     assert "atomics.execute" in text and "sort" in text
+
+
+def test_report_surfaces_skipped_fields():
+    from repro.telemetry.report import build_report, render_text
+    evs = [_ev("local", "sort", "faa", 64, 1e-4, 2e-4)] * 2   # below floor
+    report = build_report(evs)
+    assert report["spec_update"] == {}
+    assert report["spec_update_skipped"]["sort_elem_pass_s"]["n"] == 2
+    text = render_text(report)
+    assert "sort_elem_pass_s: skipped" in text
+
+
+# ---------------------------------------------------------------------------
+# add_sink / remove_sink and the ring crash-flush
+# ---------------------------------------------------------------------------
+
+def test_add_sink_widens_flags_and_remove_sink_resets():
+    outer = telemetry.RingBuffer()
+    telemetry.enable(outer, sync=True)
+    tap = telemetry.RingBuffer()
+    telemetry.add_sink(tap, sync=False)          # must NOT narrow sync
+    assert telemetry.sync_enabled()
+    telemetry.record("ev")
+    assert len(outer.events) == 1 and len(tap.events) == 1
+    assert telemetry.remove_sink(tap) is True
+    assert telemetry.remove_sink(tap) is False   # already gone
+    telemetry.record("ev")
+    assert len(outer.events) == 2 and len(tap.events) == 1
+    assert telemetry.remove_sink(outer) is True
+    assert not telemetry.enabled()               # last sink out: stream off
+    assert not telemetry.sync_enabled()
+
+
+def test_add_sink_alone_enables_the_stream():
+    tap = telemetry.RingBuffer()
+    telemetry.add_sink(tap, sync=True)
+    assert telemetry.enabled() and telemetry.sync_enabled()
+    telemetry.remove_sink(tap)
+    assert not telemetry.enabled()
+
+
+def test_ring_events_and_flush_ring(tmp_path):
+    assert telemetry.flush_ring() == 0           # no ring sink: no-op
+    buf = telemetry.RingBuffer()
+    telemetry.enable(buf)
+    telemetry.record("a", i=1)
+    telemetry.record("b", arr=np.arange(2))
+    assert [e["event"] for e in telemetry.ring_events()] == ["a", "b"]
+    path = str(tmp_path / "flush.jsonl")
+    assert telemetry.flush_ring(path) == 2
+    back = telemetry.read_jsonl(path)
+    assert [e["event"] for e in back] == ["a", "b"]
+    assert back[1]["arr"] == [0, 1]              # jsonable coercion applied
+    # a JSONL-only stream has no ring to flush
+    telemetry.disable()
+    telemetry.enable(telemetry.JsonlWriter(str(tmp_path / "cap.jsonl")))
+    telemetry.record("c")
+    assert telemetry.ring_events() == [] and telemetry.flush_ring() == 0
+
+
+def test_enable_from_env_ring_names_the_flush_path(tmp_path, monkeypatch):
+    from repro.telemetry import core
+    flush_to = str(tmp_path / "ring_tail.jsonl")
+    monkeypatch.setattr(core, "_ring_flush_path", None)
+    monkeypatch.setenv(telemetry.TELEMETRY_ENV, f"ring:{flush_to}")
+    assert telemetry.enable_from_env() is True
+    telemetry.record("crashy", step=3)
+    assert telemetry.flush_ring() == 1           # default target = env path
+    assert telemetry.read_jsonl(flush_to)[0]["event"] == "crashy"
+
+
+def test_run_result_attaches_ring_tail():
+    from repro.runtime.fault_tolerance import FaultConfig, run_with_recovery
+    telemetry.enable(telemetry.RingBuffer())
+    store = {}
+    res = run_with_recovery(
+        lambda s, x: x + 1, 0, 4,
+        FaultConfig(checkpoint_every=2, backoff_base_s=0.0),
+        lambda s, x: store.__setitem__(s, x),
+        lambda: None)
+    assert res.steps_done == 4
+    assert any(e["event"] == "recovery.restore"
+               for e in res.telemetry_ring)
+    telemetry.disable()
+    # without a ring sink the field is simply empty — no mode check needed
+    res2 = run_with_recovery(
+        lambda s, x: x + 1, 0, 2,
+        FaultConfig(checkpoint_every=2, backoff_base_s=0.0),
+        lambda s, x: None, lambda: None)
+    assert res2.telemetry_ring == []
+
+
+def test_fatal_fault_flushes_the_ring_to_disk(tmp_path, monkeypatch):
+    from repro.runtime.fault_tolerance import (FatalFault, FaultConfig,
+                                               run_with_recovery)
+    from repro.telemetry import core
+    flush_to = str(tmp_path / "postmortem.jsonl")
+    monkeypatch.setattr(core, "_ring_flush_path", None)
+    monkeypatch.setenv(telemetry.TELEMETRY_ENV, f"ring:{flush_to}")
+    telemetry.enable_from_env()
+
+    def dying_step(step, state):
+        telemetry.record("train.step", step=step)
+        if step == 2:
+            raise FatalFault("chip gone for good")
+        return state + 1
+
+    with pytest.raises(FatalFault):
+        run_with_recovery(
+            dying_step, 0, 6,
+            FaultConfig(checkpoint_every=2, backoff_base_s=0.0),
+            lambda s, x: None, lambda: None)
+    # the last-N events landed on disk before the fault propagated
+    events = telemetry.read_jsonl(flush_to)
+    assert any(e["event"] == "train.step" and e["step"] == 2
+               for e in events)
+    assert any(e["event"] == "recovery.fault" and e["fatal"]
+               for e in events)
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,586 @@
+"""Guarded self-tuning (`repro.tuning`): controller, estimator, chaos.
+
+The acceptance contract of ISSUE 9's robustness tentpole:
+
+* the live-spec indirection swaps the selection cost model under all
+  three tiers at once, and the controller's guardrails (clamp, deadband,
+  cooldown, rollback, quarantine, validated persistence) make the
+  feedback loop safe to leave on;
+* the ``spec_perturb`` chaos site poisons the loop deterministically and
+  the controller converges back / rolls back / quarantines — never
+  silently;
+* the load-bearing invariant: tuned runs are **bit-identical** to
+  untuned runs (the spec steers selection only), asserted both on the
+  chaos-matrix workload and on real train() metrics.
+"""
+
+import dataclasses
+import json
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import atomics, telemetry
+from repro.checkpoint import ckpt
+from repro.core import perf_model, rmw_engine
+from repro.runtime.chaos import FaultPlan, SiteSpec
+from repro.runtime.fault_tolerance import (FaultConfig, declare_donation,
+                                           run_with_recovery)
+from repro.tuning import (TUNABLE_FIELDS, TUNING_ENV, ContentionEstimator,
+                          SpecController, TuningConfig, active_controller,
+                          from_env, site_key)
+
+#: the test-sized guardrail config: tiny windows, no cooldown
+CFG = TuningConfig(min_events=8, min_samples=2, cooldown_updates=0)
+
+P0 = 1e-5     # base predicted wall per synthetic drift event
+
+
+@pytest.fixture(autouse=True)
+def _tuning_hygiene():
+    """No live spec / controller / stream state may leak across tests."""
+    yield
+    ctrl = active_controller()
+    if ctrl is not None:
+        ctrl.stop()
+    rmw_engine.clear_live_spec()
+    assert not telemetry.enabled()
+
+
+def _feed_window(ctrl, true_factor, *, events=None):
+    """Emit one full drift window through the live stream, closed-loop:
+    predictions come from the *active* spec (scaled off the base field),
+    measurements from the 'true' hardware (``base * true_factor``), then
+    run one controller step and return its outcome."""
+    k = ctrl.active.loop_step_s / ctrl.base.loop_step_s
+    for _ in range(events if events is not None else ctrl.cfg.min_events):
+        telemetry.record("atomics.execute", tier="local",
+                         backend="serialized", op="faa", n=256,
+                         predicted_s=P0 * k, measured_s=P0 * true_factor)
+    return ctrl.step()
+
+
+def _events(buf, name):
+    return [e for e in buf.events if e.get("event") == name]
+
+
+def _perturb_u(seed):
+    """The deterministic spec_perturb parameter draw of ``seed``'s first
+    firing — what the controller's `_maybe_perturb` will see."""
+    plan = FaultPlan(seed, {"spec_perturb": SiteSpec(prob=1.0)})
+    assert plan.fire("spec_perturb")
+    return plan.param("spec_perturb")
+
+
+def _seed_where(pred):
+    for seed in range(256):
+        if pred(_perturb_u(seed)):
+            return seed
+    raise AssertionError("no seed in 0..255 draws the wanted parameter")
+
+
+# ---------------------------------------------------------------------------
+# the live-spec indirection (rmw_engine)
+# ---------------------------------------------------------------------------
+
+def test_live_spec_indirection_covers_default_spec():
+    cal = rmw_engine.calibrated_spec()
+    assert rmw_engine.live_spec() is None
+    assert rmw_engine.default_spec() == cal
+    e0 = rmw_engine.spec_epoch()
+    tuned = dataclasses.replace(cal, loop_step_s=cal.loop_step_s * 2)
+    rmw_engine.set_live_spec(tuned)
+    assert rmw_engine.default_spec() == tuned
+    assert rmw_engine.live_spec() == tuned
+    assert rmw_engine.spec_epoch() == e0 + 1
+    rmw_engine.clear_live_spec()
+    assert rmw_engine.default_spec() == cal
+    assert rmw_engine.spec_epoch() == e0 + 2
+    rmw_engine.clear_live_spec()            # idempotent: no spurious bump
+    assert rmw_engine.spec_epoch() == e0 + 2
+
+
+def test_set_live_spec_rejects_non_spec():
+    with pytest.raises(TypeError, match="HardwareSpec"):
+        rmw_engine.set_live_spec({"loop_step_s": 1.0})
+
+
+# ---------------------------------------------------------------------------
+# the update cycle: apply / confirm / clamp-walk / rollback / deadband
+# ---------------------------------------------------------------------------
+
+def test_window_fills_then_applies():
+    with telemetry.capture() as buf:
+        with SpecController(CFG) as ctrl:
+            assert ctrl.step() is None          # empty window: fast path
+            out = _feed_window(ctrl, 2.0, events=CFG.min_events - 1)
+            assert out is None                  # still below min_events
+            out = _feed_window(ctrl, 2.0, events=1)
+            assert out == "apply"
+            assert ctrl.active.loop_step_s == pytest.approx(
+                ctrl.base.loop_step_s * 2.0)
+            # installed process-wide, under every tier's default
+            assert rmw_engine.default_spec() == ctrl.active
+        assert rmw_engine.live_spec() is None   # stop() clears the override
+    (apply,) = _events(buf, "tuning.apply")
+    assert "loop_step_s" in apply["fields"]
+    assert apply["fields"]["loop_step_s"]["to"] == pytest.approx(
+        ctrl.base.loop_step_s * 2.0)
+
+
+def test_clamp_walks_large_corrections_then_converges():
+    """A 4x-miscalibrated constant is corrected over two clamped applies
+    (max_update_factor=2), then held once converged."""
+    with telemetry.capture() as buf:
+        with SpecController(CFG) as ctrl:
+            assert _feed_window(ctrl, 4.0) == "apply"     # clamped to 2x
+            assert _feed_window(ctrl, 4.0) == "apply"     # walks to 4x
+            assert _feed_window(ctrl, 4.0) == "hold"      # converged
+            assert ctrl.active.loop_step_s == pytest.approx(
+                ctrl.base.loop_step_s * 4.0)
+            assert ctrl.n_applied == 2 and ctrl.n_rollbacks == 0
+    first = _events(buf, "tuning.apply")[0]
+    assert "loop_step_s" in first["clamped"]              # the clamp spoke up
+    assert len(_events(buf, "tuning.confirm")) == 2       # both swaps upheld
+    (hold,) = [e for e in _events(buf, "tuning.skip")
+               if e["reason"] == "deadband"]
+    assert hold["n"] == CFG.min_events
+
+
+def test_rollback_reinstalls_the_previous_spec():
+    with telemetry.capture() as buf:
+        with SpecController(CFG) as ctrl:
+            assert _feed_window(ctrl, 2.0) == "apply"
+            # post-swap window wildly worse than the pre-swap score:
+            # the swap must be judged harmful and undone
+            assert _feed_window(ctrl, 64.0) == "rollback"
+            assert ctrl.active == ctrl.base               # bit-equal restore
+            assert rmw_engine.default_spec() == ctrl.base
+            assert ctrl.n_rollbacks == 1
+    (rb,) = _events(buf, "tuning.rollback")
+    assert rb["score"] > rb["pre_swap_score"] + CFG.rollback_margin
+    assert not _events(buf, "tuning.confirm")
+
+
+def test_cooldown_sits_out_a_window_after_a_swap():
+    cfg = dataclasses.replace(CFG, cooldown_updates=1)
+    with telemetry.capture() as buf:
+        with SpecController(cfg) as ctrl:
+            assert _feed_window(ctrl, 2.0) == "apply"
+            # the post-swap window still runs the rollback check (and
+            # confirms), but fitting sits out the cooldown
+            assert _feed_window(ctrl, 2.0) == "cooldown"
+            assert _feed_window(ctrl, 2.0) == "hold"      # converged by now
+    assert len(_events(buf, "tuning.confirm")) == 1
+    assert [e["reason"] for e in _events(buf, "tuning.skip")] == \
+        ["cooldown", "deadband"]
+
+
+def test_deadband_holds_sub_threshold_moves():
+    with telemetry.capture() as buf:
+        with SpecController(CFG) as ctrl:
+            assert _feed_window(ctrl, math.exp(0.02)) == "hold"
+            assert ctrl.active == ctrl.base
+            assert ctrl.n_applied == 0
+    (skip,) = _events(buf, "tuning.skip")
+    assert skip["reason"] == "deadband"
+
+
+def test_per_field_sample_floors_surface_skipped_fields():
+    cfg = dataclasses.replace(
+        CFG, min_samples=2, min_samples_per_field={"sort_elem_pass_s": 99})
+    with telemetry.capture() as buf:
+        with SpecController(cfg) as ctrl:
+            for _ in range(6):
+                telemetry.record("atomics.execute", tier="local",
+                                 backend="serialized", op="faa", n=256,
+                                 predicted_s=P0, measured_s=P0 * 2)
+            for _ in range(2):
+                telemetry.record("atomics.execute", tier="local",
+                                 backend="sort", op="faa", n=256,
+                                 predicted_s=P0, measured_s=P0 * 3)
+            assert ctrl.step() == "apply"
+            assert ctrl.active.loop_step_s == pytest.approx(
+                ctrl.base.loop_step_s * 2)
+            # the sort pool had drift evidence but sat below its floor:
+            # surfaced, not silently dropped
+            assert ctrl.active.sort_elem_pass_s == ctrl.base.sort_elem_pass_s
+    (apply,) = _events(buf, "tuning.apply")
+    assert apply["skipped"]["sort_elem_pass_s"] == {"n": 2,
+                                                    "min_samples": 99}
+
+
+def test_only_one_controller_per_process():
+    with telemetry.capture():
+        with SpecController(CFG):
+            with pytest.raises(RuntimeError, match="already running"):
+                SpecController(CFG).start()
+        with SpecController(CFG):           # released on stop
+            pass
+
+
+def test_stats_reports_counters_and_tuned_fields():
+    with telemetry.capture():
+        with SpecController(CFG) as ctrl:
+            _feed_window(ctrl, 2.0)
+            stats = ctrl.stats()
+    assert stats["applied"] == 1 and stats["updates"] == 1
+    assert stats["last_outcome"] == "apply"
+    assert set(stats["tuned_fields"]) == {"loop_step_s"}
+    assert stats["tuned_fields"]["loop_step_s"]["active"] == pytest.approx(
+        stats["tuned_fields"]["loop_step_s"]["calibrated"] * 2)
+
+
+def test_from_env(monkeypatch, tmp_path):
+    monkeypatch.delenv(TUNING_ENV, raising=False)
+    assert from_env() is None
+    monkeypatch.setenv(TUNING_ENV, "off")
+    assert from_env() is None
+    monkeypatch.setenv(TUNING_ENV, "on")
+    ctrl = from_env()
+    assert isinstance(ctrl, SpecController) and ctrl.state_path is None
+    path = str(tmp_path / "tuned.json")
+    monkeypatch.setenv(TUNING_ENV, path)
+    assert from_env().state_path == path
+
+
+# ---------------------------------------------------------------------------
+# chaos: the spec_perturb site
+# ---------------------------------------------------------------------------
+
+def test_spec_perturb_draws_are_deterministic():
+    assert _perturb_u(3) == _perturb_u(3)
+    # the parameter space is actually exercised: all three perturb kinds
+    # are reachable from some seed
+    _seed_where(lambda u: u < 0.5)               # skew
+    _seed_where(lambda u: 0.5 <= u < 0.75)       # NaN poison
+    _seed_where(lambda u: u >= 0.75)             # negative poison
+
+
+def test_skewed_window_is_walked_back_by_honest_windows():
+    """spec_perturb (skew) poisons the live spec through its own feedback
+    loop — subsequent honest windows must converge it back to base."""
+    seed = _seed_where(
+        lambda u: u < 0.5 and abs(4.0 * u - 1.0) * math.log(8.0) > 0.3)
+    plan = FaultPlan(seed, {"spec_perturb": SiteSpec(prob=1.0, count=1)})
+    with telemetry.capture() as buf:
+        with SpecController(CFG, chaos=plan) as ctrl:
+            assert _feed_window(ctrl, 1.0) == "apply"     # the skewed swap
+            skewed = ctrl.active.loop_step_s
+            assert skewed != ctrl.base.loop_step_s
+            _feed_window(ctrl, 1.0)                       # honest: walk back
+            _feed_window(ctrl, 1.0)
+            assert abs(math.log(ctrl.active.loop_step_s
+                                / ctrl.base.loop_step_s)) < CFG.deadband
+            assert ctrl.n_perturbs == 1
+    (pert,) = _events(buf, "tuning.perturb")
+    assert pert["kind"] == "skew"
+
+
+@pytest.mark.parametrize("kind,pick", [
+    ("nan", lambda u: 0.5 <= u < 0.75),
+    ("negative", lambda u: u >= 0.75),
+])
+def test_poisoned_proposals_are_quarantined(kind, pick):
+    plan = FaultPlan(_seed_where(pick),
+                     {"spec_perturb": SiteSpec(prob=1.0, count=1)})
+    with telemetry.capture() as buf:
+        with SpecController(CFG, chaos=plan) as ctrl:
+            assert _feed_window(ctrl, 3.0) == "quarantine"
+            assert ctrl.active == ctrl.base       # nothing installed
+            assert ctrl.n_quarantined == 1
+            # and the loop keeps working: the next honest window applies
+            assert _feed_window(ctrl, 3.0) == "apply"
+    (q,) = _events(buf, "tuning.quarantine")
+    (name, info), = q["fields"].items()
+    assert name in TUNABLE_FIELDS
+    assert info["reason"] == "non-finite or non-positive"
+    (pert,) = _events(buf, "tuning.perturb")
+    assert pert["kind"] == "poison" and pert["poison"] == kind
+
+
+def test_out_of_envelope_proposal_falls_back_to_calibrated():
+    """A finite but absurd proposal (outside envelope_factor of the
+    calibrated spec) quarantines; a tuned field resets to calibrated."""
+    with telemetry.capture() as buf:
+        with SpecController(CFG) as ctrl:
+            assert _feed_window(ctrl, 2.0) == "apply"     # now tuned 2x
+            # bypass the fitter: hand _guard a pathological proposal
+            applied, _clamped, quarantined = ctrl._guard(
+                {"loop_step_s": ctrl.base.loop_step_s
+                 * CFG.envelope_factor * 10})
+            assert "loop_step_s" in quarantined
+            assert quarantined["loop_step_s"]["reason"] == \
+                "outside calibrated envelope"
+            # the tuned (cur != cal) field falls back to calibrated
+            assert applied == {"loop_step_s": ctrl.base.loop_step_s}
+    assert buf  # capture kept alive past stop for symmetry with the others
+
+
+# ---------------------------------------------------------------------------
+# validated persistence
+# ---------------------------------------------------------------------------
+
+EST_KEY = ("cas", "local", "2^4", "2^3")
+
+
+def test_state_roundtrip_restores_spec_and_estimator(tmp_path):
+    path = str(tmp_path / "tuned.json")
+    with telemetry.capture():
+        with SpecController(CFG, state_path=path) as ctrl:
+            _feed_window(ctrl, 2.0)
+            ctrl.estimator.update(EST_KEY, 4)
+            tuned = ctrl.active
+    assert json.load(open(path))["jax_backend"] == jax.default_backend()
+    with telemetry.capture() as buf:
+        with SpecController(CFG, state_path=path) as ctrl2:
+            assert ctrl2.active == tuned
+            assert rmw_engine.default_spec() == tuned     # re-installed
+            assert ctrl2.estimator.raw(EST_KEY) == 4.0
+    (restore,) = _events(buf, "tuning.restore")
+    assert restore["accepted"] and not restore["quarantined"]
+    assert restore["estimator_sites"] == 1
+
+
+def test_restore_rejects_backend_mismatch(tmp_path):
+    path = tmp_path / "tuned.json"
+    base = rmw_engine.calibrated_spec()
+    path.write_text(json.dumps({
+        "version": 1, "jax_backend": "not-this-backend",
+        "spec": perf_model.spec_to_dict(
+            dataclasses.replace(base, loop_step_s=base.loop_step_s * 2))}))
+    with telemetry.capture() as buf:
+        with SpecController(CFG, state_path=str(path)) as ctrl:
+            assert ctrl.active == ctrl.base               # nothing installed
+    (restore,) = _events(buf, "tuning.restore")
+    assert restore["accepted"] is False
+    assert "backend mismatch" in restore["reason"]
+
+
+def test_restore_quarantines_out_of_envelope_fields(tmp_path):
+    path = tmp_path / "tuned.json"
+    base = rmw_engine.calibrated_spec()
+    poisoned = dataclasses.replace(
+        base,
+        loop_step_s=base.loop_step_s * CFG.envelope_factor * 100,
+        gather_elem_s=base.gather_elem_s * 1.5)           # this one is fine
+    path.write_text(json.dumps({
+        "version": 1, "jax_backend": jax.default_backend(),
+        "spec": perf_model.spec_to_dict(poisoned)}))
+    with telemetry.capture() as buf:
+        with SpecController(CFG, state_path=str(path)) as ctrl:
+            # suspect field reset to calibrated, sane field kept
+            assert ctrl.active.loop_step_s == base.loop_step_s
+            assert ctrl.active.gather_elem_s == pytest.approx(
+                base.gather_elem_s * 1.5)
+    (restore,) = _events(buf, "tuning.restore")
+    assert restore["accepted"] and \
+        set(restore["quarantined"]) == {"loop_step_s"}
+
+
+def test_restore_rejects_unreadable_state(tmp_path):
+    path = tmp_path / "tuned.json"
+    path.write_text("not json {{{")
+    with telemetry.capture() as buf:
+        with SpecController(CFG, state_path=str(path)) as ctrl:
+            assert ctrl.active == ctrl.base
+    (restore,) = _events(buf, "tuning.restore")
+    assert restore["accepted"] is False
+
+
+# ---------------------------------------------------------------------------
+# the contention estimator
+# ---------------------------------------------------------------------------
+
+def test_estimator_ewma_and_pow2_hint():
+    est = ContentionEstimator(alpha=0.5)
+    key = site_key("cas", "local", 16, 8)
+    assert est.hint(key) is None
+    est.update(key, 2)
+    est.update(key, 6)                        # ewma: 2 + .5*(6-2) = 4
+    assert est.raw(key) == pytest.approx(4.0)
+    assert est.hint(key) == 4                 # already a power of two
+    est.update(key, 6)                        # ewma 5 -> rounds to 4
+    assert est.hint(key) in (4, 8)
+    assert math.log2(est.hint(key)).is_integer()
+    # junk observations carry no signal and are ignored
+    est.update(key, 0)
+    est.update(key, -3)
+    est.update(key, float("nan"))
+    assert est.raw(key) == pytest.approx(5.0)
+    with pytest.raises(ValueError, match="alpha"):
+        ContentionEstimator(alpha=0.0)
+
+
+def test_estimator_snapshot_restore_drops_malformed():
+    est = ContentionEstimator()
+    est.update(EST_KEY, 4)
+    snap = est.snapshot()
+    snap["sites"]["bad|key"] = 2.0            # wrong arity
+    snap["sites"]["a|b|c|d"] = float("nan")   # non-finite
+    snap["sites"]["e|f|g|h"] = 0.5            # below 1: no signal
+    fresh = ContentionEstimator()
+    assert fresh.restore(snap) == 1
+    assert fresh.raw(EST_KEY) == 4.0
+    assert len(fresh) == 1
+
+
+def test_execute_until_feeds_the_estimator():
+    """A contended CAS loop under a running controller must observe its
+    own collision counts — round-0 distinct slots AND the CAS
+    round-histogram winners — into the estimator, keyed by call site."""
+    with telemetry.capture(sync=True) as buf:
+        with SpecController(CFG) as ctrl:
+            table = atomics.AtomicTable(jnp.zeros((8,), jnp.int32))
+
+            def make_ops(slots, observed):
+                if slots is None:             # all six ops fight slot 0
+                    return atomics.Cas(jnp.zeros(6, jnp.int32),
+                                       jnp.ones(6, jnp.int32),
+                                       expected=jnp.int32(0))
+                return observed + 1           # lock-free fetch-increment
+
+            res = atomics.execute_until(table, make_ops, max_rounds=8)
+            assert res.success.all()
+            assert int(res.table.data[0]) == 6
+            key = site_key("cas", "local", 8, 6)
+            # both observations say "1 distinct slot": round-0 unique
+            # count and first-attempt winners agree
+            assert ctrl.estimator.raw(key) == pytest.approx(1.0)
+            assert ctrl.estimator.hint(key) == 1
+    rounds = [e for e in buf.events
+              if e.get("event") == "atomics.retry.round"]
+    assert rounds[0]["distinct_observed"] == 1
+
+
+def test_execute_until_without_controller_is_unchanged():
+    table = atomics.AtomicTable(jnp.zeros((8,), jnp.int32))
+
+    def make_ops(slots, observed):
+        if slots is None:
+            return atomics.Cas(jnp.arange(4, dtype=jnp.int32),
+                               jnp.ones(4, jnp.int32),
+                               expected=jnp.int32(0))
+        return observed + 1
+
+    res = atomics.execute_until(table, make_ops, max_rounds=4)
+    assert res.success.all() and res.n_rounds == 1
+    assert active_controller() is None
+
+
+# ---------------------------------------------------------------------------
+# integration: wrap_step, the chaos matrix, train()
+# ---------------------------------------------------------------------------
+
+def test_wrap_step_preserves_donation_and_runs_the_cycle():
+    def step(i, state):
+        return state
+
+    donating = declare_donation(step, (1,))
+    with telemetry.capture():
+        with SpecController(CFG) as ctrl:
+            wrapped = ctrl.wrap_step(donating)
+            assert tuple(wrapped.donate_argnums) == (1,)
+            for _ in range(CFG.min_events):
+                telemetry.record("atomics.execute", tier="local",
+                                 backend="serialized", op="faa", n=256,
+                                 predicted_s=P0, measured_s=P0 * 2)
+            wrapped(0, None)                  # the wrapped call steps
+            assert ctrl.last_outcome == "apply"
+
+
+N_STEPS = 12
+M_SLOTS = 16
+
+
+def _matrix_step(step, state):
+    """Deterministic per (step, state): an FAA batch against a live table
+    plus a fetched-sum accumulator (fetched values are load-bearing)."""
+    table, acc = state
+    idx = jnp.asarray((np.arange(8) * (step + 3)) % M_SLOTS, jnp.int32)
+    vals = jnp.asarray(np.arange(8) + step, jnp.int32)
+    res = atomics.execute(table, atomics.Faa(idx, vals))
+    return res.table, acc + jnp.sum(res.fetched)
+
+
+def _run_matrix(tmp_path, tag, chaos, controller):
+    from repro.runtime.elastic import reshard_tables
+    ckpt_dir = str(tmp_path / tag)
+    table0 = atomics.AtomicTable(jnp.zeros((M_SLOTS,), jnp.int32))
+    like = {"table": table0, "acc": jnp.int32(0)}
+    step_fn = (_matrix_step if controller is None
+               else controller.wrap_step(_matrix_step))
+
+    def save_fn(step, state):
+        ckpt.save(ckpt_dir, step, {"table": state[0], "acc": state[1]})
+
+    def restore_fn():
+        got = ckpt.restore_latest_valid(ckpt_dir, like)
+        if got is None:
+            return None
+        step, tree, _ = got
+        return step, (tree["table"], tree["acc"])
+
+    cfg = FaultConfig(max_failures=60, checkpoint_every=4,
+                      backoff_base_s=0.0)
+    res = run_with_recovery(step_fn, (table0, jnp.int32(0)), N_STEPS, cfg,
+                            save_fn, restore_fn, chaos=chaos,
+                            reshard_fn=lambda s: reshard_tables(s, None))
+    assert res.steps_done == N_STEPS
+    final = ckpt.restore_latest_valid(ckpt_dir, like)
+    assert final[0] == N_STEPS
+    return np.asarray(final[1]["table"].data), int(final[1]["acc"])
+
+
+def test_tuned_chaos_matrix_bit_identical_to_untuned(tmp_path):
+    """The tentpole invariant, under fire: >= 5 seeds of recovery faults
+    PLUS spec_perturb poison, with a live controller actually retuning
+    the spec mid-run — and the final table + fetched-sum accumulator are
+    bit-equal to the untuned fault-free run, every seed."""
+    base_table, base_acc = _run_matrix(tmp_path, "base", FaultPlan.null(),
+                                       None)
+    assert base_table.any()
+    sites = {"step": SiteSpec(prob=0.2, count=2),
+             "ckpt_save": SiteSpec(prob=0.2, count=2),
+             "ckpt_restore": SiteSpec(prob=0.2, count=1),
+             "reshard": SiteSpec(prob=0.2, count=1),
+             "spec_perturb": SiteSpec(prob=0.5)}
+    cfg = TuningConfig(min_events=6, min_samples=1, cooldown_updates=0)
+    updates = perturbs = fired = 0
+    for seed in range(1, 6):
+        plan = FaultPlan(seed, sites)
+        ctrl = SpecController(cfg, chaos=plan)
+        with ctrl:
+            table, acc = _run_matrix(tmp_path, f"seed{seed}", plan, ctrl)
+        np.testing.assert_array_equal(
+            table, base_table,
+            err_msg=f"seed {seed}: tuned run diverged from untuned")
+        assert acc == base_acc, f"seed {seed}: accumulator diverged"
+        updates += ctrl.n_updates
+        perturbs += ctrl.n_perturbs
+        fired += plan.total_fired
+    assert updates >= 5           # the controller really retuned mid-run
+    assert perturbs >= 1          # and the spec_perturb site really fired
+    assert fired >= 5             # alongside a real recovery-fault storm
+
+
+def test_train_metrics_bit_equal_tuned_vs_untuned(monkeypatch):
+    """Real train() steps: a live controller (telemetry sync on, spec
+    swaps mid-run) must not move a single loss bit."""
+    from repro.launch.train import train
+    monkeypatch.delenv(TUNING_ENV, raising=False)
+    kw = dict(steps=4, seq_len=16, global_batch=2, lr=1e-3, log_every=1,
+              seed=7)
+    base = train("gemma_2b", **kw)
+    ctrl = SpecController(TuningConfig(min_events=4, min_samples=1,
+                                       cooldown_updates=0))
+    tuned = train("gemma_2b", **kw, tuning=ctrl)
+    assert "tuning" in tuned and tuned["tuning"]["updates"] >= 0
+    assert [h["loss"] for h in base["history"]] == \
+        [h["loss"] for h in tuned["history"]]
+    assert [h["grad_norm"] for h in base["history"]] == \
+        [h["grad_norm"] for h in tuned["history"]]
+    assert rmw_engine.live_spec() is None     # train() stopped the controller
