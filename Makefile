@@ -4,8 +4,8 @@ export PYTHONPATH := src:.:$(PYTHONPATH)
 
 .PHONY: test test-tier1 test-deprecations test-chaos test-telemetry \
         test-tuning smoke bench-rmw bench-rmw-sharded bench-atomics \
-        bench-reshard calibrate bench-telemetry bench-tuning lint-atomics \
-        lint-ruff
+        bench-reshard calibrate bench-telemetry bench-tuning \
+        bench-contention-observe lint-atomics lint-ruff clean
 
 # Tier-1 gate + benchmark smoke (what CI runs).
 test: test-tier1 smoke
@@ -76,8 +76,10 @@ lint-ruff:
 	  && $(PYTHON) -m ruff check src/repro/analysis \
 	  || echo "ruff not installed (pip install -r requirements-dev.txt); skipping"
 
-# Where `make smoke` drops its instrumented capture (JSONL, overwritten).
+# Where `make smoke` drops its instrumented capture (JSONL, overwritten)
+# and the rendered report (CI uploads both as workflow artifacts).
 SMOKE_TRACE ?= /tmp/repro_smoke_trace.jsonl
+SMOKE_REPORT ?= /tmp/repro_smoke_report.txt
 
 # Fast benchmark smoke: latency + bandwidth + the sharded-RMW exchange +
 # the elastic-migration paths + the fault-recovery/bounded-retry gates +
@@ -89,10 +91,10 @@ SMOKE_TRACE ?= /tmp/repro_smoke_trace.jsonl
 # the captured events — the full observability loop in one make target.
 smoke:
 	$(PYTHON) benchmarks/run.py --fast \
-	  --only latency,bandwidth,rmw_sharded,reshard,fault_recovery,telemetry_drift,analysis,tuning
+	  --only latency,bandwidth,rmw_sharded,reshard,fault_recovery,telemetry_drift,contention_observe,analysis,tuning
 	REPRO_TELEMETRY=$(SMOKE_TRACE) $(PYTHON) benchmarks/run.py --fast \
 	  --only latency
-	$(PYTHON) -m repro.telemetry.report $(SMOKE_TRACE)
+	$(PYTHON) -m repro.telemetry.report $(SMOKE_TRACE) | tee $(SMOKE_REPORT)
 
 # Full RMW backend shoot-out; rewrites benchmarks/results/rmw_backends.json.
 bench-rmw:
@@ -125,6 +127,13 @@ bench-telemetry:
 bench-tuning:
 	$(PYTHON) benchmarks/run.py --only tuning
 
+# Contention observatory gates (collect_stats= bit-identity local +
+# 8-fake-device sharded, stats-off noise floor, <5% stats-on overhead on
+# the contended retry workload, device-fed estimator sites, predicted-vs-
+# measured Fig. 8 sweep); rewrites benchmarks/results/contention_observe.json.
+bench-contention-observe:
+	$(PYTHON) benchmarks/run.py --only contention_observe
+
 # Fit + persist the container HardwareSpec (results/calibrated_spec.json).
 calibrate:
 	$(PYTHON) benchmarks/run.py --only calibrate
@@ -136,3 +145,11 @@ bench-fault-recovery:
 
 dev-deps:
 	pip install -r requirements-dev.txt
+
+# Run artifacts: telemetry ring flushes (artifacts/telemetry/, or a stray
+# CWD repro_telemetry_ring.jsonl from pre-observatory checkouts), smoke
+# captures, and the uncommitted *_fast.json benchmark variants.
+clean:
+	rm -rf artifacts
+	rm -f repro_telemetry_ring.jsonl $(SMOKE_TRACE) $(SMOKE_REPORT)
+	rm -f benchmarks/results/*_fast.json

@@ -59,8 +59,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (analysis_sweep, bandwidth, bfs, calibrate,
-                            contention, fault_recovery, latency,
-                            model_validation, operand_size,
+                            contention, contention_observe, fault_recovery,
+                            latency, model_validation, operand_size,
                             operands_fetched, prefetcher, reshard,
                             rmw_backends, rmw_sharded, roofline,
                             telemetry_drift, tuning, unaligned)
@@ -87,6 +87,8 @@ def main() -> None:
         "calibrate": lambda c: calibrate.run(c, fast=args.fast),
         "fault_recovery": lambda c: fault_recovery.run(c, fast=args.fast),
         "telemetry_drift": lambda c: telemetry_drift.run(c, fast=args.fast),
+        "contention_observe":
+            lambda c: contention_observe.run(c, fast=args.fast),
         "analysis": lambda c: analysis_sweep.run(c, fast=args.fast),
         "tuning": lambda c: tuning.run(c, fast=args.fast),
         "model_validation": model_validation.run,

@@ -59,6 +59,7 @@ from repro.atomics.ops import (  # noqa: F401
     OP_KINDS, AtomicOp, Cas, Faa, Max, Min, Swp)
 from repro.atomics.table import AtomicTable, make_table  # noqa: F401
 from repro.atomics.layout import TableLayout  # noqa: F401
+from repro.atomics.stats import ContentionStats  # noqa: F401
 from repro.atomics.execute import (  # noqa: F401
     AtomicResult, arrival_rank, execute)
 from repro.atomics.retry import (  # noqa: F401
@@ -71,7 +72,7 @@ from repro.atomics.reshard import (  # noqa: F401
 __all__ = [
     "AtomicOp", "Faa", "Swp", "Min", "Max", "Cas", "OP_KINDS",
     "AtomicTable", "make_table", "TableLayout",
-    "AtomicResult", "execute", "arrival_rank",
+    "AtomicResult", "ContentionStats", "execute", "arrival_rank",
     "RetryPolicy", "RetryResult", "execute_until", "POLICIES",
     "ImmediateRetry", "ShrinkBatch", "ExponentialBackoff",
     "ReshardPlan", "plan_reshard", "migrate", "restore_table",

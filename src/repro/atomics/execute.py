@@ -29,6 +29,7 @@ arrival-order contract).
 
 from __future__ import annotations
 
+import functools
 import time
 from typing import Any, NamedTuple, Optional, Sequence, Tuple, Union
 
@@ -38,6 +39,7 @@ import jax.numpy as jnp
 from repro import telemetry
 from repro.telemetry import core as _tcore
 from repro.atomics import contracts as _contracts
+from repro.atomics import stats as _cstats
 from repro.atomics.ops import AtomicOp
 from repro.atomics.table import AtomicTable
 from repro.core import rmw as rmw_mod
@@ -54,11 +56,17 @@ class AtomicResult(NamedTuple):
     non-CAS ops).  With ``need_fetched=False`` both are zero placeholders —
     only ``table`` is meaningful.  When `execute` was given a *sequence* of
     op batches, ``fetched``/``success`` are tuples, one entry per batch.
+
+    ``stats`` is ``None`` unless the call passed ``collect_stats=True``, in
+    which case it holds the batch's device-side
+    :class:`~repro.atomics.stats.ContentionStats` (a tuple of them for a
+    sequence of op batches).
     """
 
     table: AtomicTable
     fetched: Any
     success: Any
+    stats: Any = None
 
 
 def _axis_names(table: AtomicTable) -> Tuple[str, ...]:
@@ -80,13 +88,43 @@ def _axes_bound(names: Tuple[str, ...]) -> bool:
         return False
 
 
+@functools.partial(jax.jit, static_argnames=("op", "backend", "need_fetched"))
+def _local_exec_stats(table: Array, indices: Array, values: Array, expected,
+                      *, op: str, backend: str, need_fetched: bool):
+    """Local execution + contention stats as ONE compiled program.
+
+    The stats path must not add a second eager dispatch (on CPU that alone
+    costs more than the gate allows), so the backend pass and the occupancy
+    reduction compile together; `backend` arrives pre-resolved (static) so
+    no spec object needs to cross the jit boundary.  Results are the same
+    ops the eager path runs — bit-identity is asserted in tests and gated
+    in benchmarks/contention_observe.py.
+    """
+    res = rmw_engine.execute_backend(table, indices, values, op, expected,
+                                     backend=backend,
+                                     need_fetched=need_fetched)
+    m = table.shape[0]
+    if backend == "pallas":
+        # the kernel's counters output ref — same one-hot contraction the
+        # Mosaic combine runs, emitted instead of discarded
+        from repro.kernels.rmw import ops as _kops
+        occ = _kops.slot_occupancy(indices, m)
+    else:
+        occ = rmw_engine.slot_occupancy(indices, m)
+    idx = indices.astype(jnp.int32)
+    n_ops = ((idx >= 0) & (idx < m)).sum(dtype=jnp.int32)
+    return res, _cstats.stats_from_occupancy(occ, n_ops)
+
+
 def _dispatch_one(table: AtomicTable, op: AtomicOp, *, need_fetched: bool,
                   backend: str, strategy: str, spec,
-                  distinct_slots: Optional[int], reverse_ranks: bool):
+                  distinct_slots: Optional[int], reverse_ranks: bool,
+                  collect_stats: bool = False):
     if not isinstance(op, AtomicOp):
         raise TypeError(
             f"ops must be atomics.Faa/Swp/Min/Max/Cas instances, "
             f"got {type(op).__name__}")
+    stats = None
     if table.is_sharded:
         if not _axes_bound(_axis_names(table)):
             raise ValueError(
@@ -102,7 +140,9 @@ def _dispatch_one(table: AtomicTable, op: AtomicOp, *, need_fetched: bool,
             axis=table.axis, replica_axes=table.replica_axes,
             strategy=strategy, backend=backend, spec=spec,
             need_fetched=need_fetched, distinct_slots=distinct_slots,
-            reverse_ranks=reverse_ranks)
+            reverse_ranks=reverse_ranks, collect_stats=collect_stats)
+        if collect_stats:
+            res, stats = res
     else:
         if reverse_ranks:
             # on one device the caller owns the whole order: reversing is
@@ -123,10 +163,23 @@ def _dispatch_one(table: AtomicTable, op: AtomicOp, *, need_fetched: bool,
                 f"sharded tier only, but the table is local — wrap it as "
                 f"AtomicTable(data, axis=...) (and call inside shard_map) "
                 f"or drop the sharded-tier arguments")
-        res = rmw_engine.execute_backend(
-            table.data, op.indices, op.values, op.kind, op.expected,
-            backend=backend, spec=spec, need_fetched=need_fetched)
-    return table.with_data(res.table), res.fetched, res.success
+        if collect_stats:
+            resolved = backend
+            if resolved == "auto":
+                resolved = rmw_engine.select_backend(
+                    op.kind, int(op.indices.shape[0]),
+                    int(table.data.shape[0]), spec,
+                    uniform_expected=(op.kind != "cas")
+                    or rmw_engine._is_uniform_expected(op.expected),
+                    dtype=table.dtype, need_fetched=need_fetched)
+            res, stats = _local_exec_stats(
+                table.data, op.indices, op.values, op.expected,
+                op=op.kind, backend=resolved, need_fetched=need_fetched)
+        else:
+            res = rmw_engine.execute_backend(
+                table.data, op.indices, op.values, op.kind, op.expected,
+                backend=backend, spec=spec, need_fetched=need_fetched)
+    return table.with_data(res.table), res.fetched, res.success, stats
 
 
 # ---------------------------------------------------------------------------
@@ -218,7 +271,8 @@ _DECISION_CACHE_MAX = 1024
 
 def _execute_one(table: AtomicTable, op: AtomicOp, *, need_fetched: bool,
                  backend: str, strategy: str, spec,
-                 distinct_slots: Optional[int], reverse_ranks: bool):
+                 distinct_slots: Optional[int], reverse_ranks: bool,
+                 collect_stats: bool = False):
     if _contracts._observer is not None:
         # static analysis in progress: report this call site's contract
         # BEFORE dispatch (a sharded-outside-shard_map call raises below,
@@ -242,14 +296,16 @@ def _execute_one(table: AtomicTable, op: AtomicOp, *, need_fetched: bool,
         return _dispatch_one(table, op, need_fetched=need_fetched,
                              backend=backend, strategy=strategy, spec=spec,
                              distinct_slots=distinct_slots,
-                             reverse_ranks=reverse_ranks)
+                             reverse_ranks=reverse_ranks,
+                             collect_stats=collect_stats)
     if not isinstance(op, AtomicOp) or \
             (table.is_sharded and not _axes_bound(_axis_names(table))):
         # let the dispatcher raise its guidance errors un-instrumented
         return _dispatch_one(table, op, need_fetched=need_fetched,
                              backend=backend, strategy=strategy, spec=spec,
                              distinct_slots=distinct_slots,
-                             reverse_ranks=reverse_ranks)
+                             reverse_ranks=reverse_ranks,
+                             collect_stats=collect_stats)
     data = table.data
     if table.is_sharded:
         # trace-time only (axis sizes are trace-scoped): never cached, and
@@ -288,12 +344,14 @@ def _execute_one(table: AtomicTable, op: AtomicOp, *, need_fetched: bool,
                 out = _dispatch_one(table, op, need_fetched=need_fetched,
                                     backend=backend, strategy=strategy,
                                     spec=spec, distinct_slots=distinct_slots,
-                                    reverse_ranks=reverse_ranks)
+                                    reverse_ranks=reverse_ranks,
+                                    collect_stats=collect_stats)
         else:
             out = _dispatch_one(table, op, need_fetched=need_fetched,
                                 backend=backend, strategy=strategy,
                                 spec=spec, distinct_slots=distinct_slots,
-                                reverse_ranks=reverse_ranks)
+                                reverse_ranks=reverse_ranks,
+                                collect_stats=collect_stats)
     else:
         t0 = time.perf_counter()
         if _tcore._annotate:
@@ -302,18 +360,30 @@ def _execute_one(table: AtomicTable, op: AtomicOp, *, need_fetched: bool,
                 out = _dispatch_one(table, op, need_fetched=need_fetched,
                                     backend=backend, strategy=strategy,
                                     spec=spec, distinct_slots=distinct_slots,
-                                    reverse_ranks=reverse_ranks)
+                                    reverse_ranks=reverse_ranks,
+                                    collect_stats=collect_stats)
         else:
             out = _dispatch_one(table, op, need_fetched=need_fetched,
                                 backend=backend, strategy=strategy,
                                 spec=spec, distinct_slots=distinct_slots,
-                                reverse_ranks=reverse_ranks)
-        jax.block_until_ready((out[0].data, out[1], out[2]))
+                                reverse_ranks=reverse_ranks,
+                                collect_stats=collect_stats)
+        sync = (out[0].data, out[1], out[2])
+        if out[3] is not None:
+            sync += (out[3],)
+        jax.block_until_ready(sync)
         fields["measured_s"] = time.perf_counter() - t0
     # the cache-copy dict becomes the event itself (record_event skips the
     # kwargs rebuild that `record` pays — this is the hottest record site)
     fields["traced"] = traced
     telemetry.record_event(fields)
+    if out[3] is not None and not traced and _tcore._sync:
+        # PR-7 jit discipline: contention.* events only at sync boundaries —
+        # the eager sync branch above already blocked on the stats leaves,
+        # so the host readout below costs no extra device round trip.
+        telemetry.record_event(_cstats.stats_to_fields(
+            out[3], tier=fields.get("tier"), op=op.kind,
+            n=fields.get("n"), m=fields.get("m"), traced=False))
     return out
 
 
@@ -322,7 +392,8 @@ def execute(table: Union[AtomicTable, Array],
             need_fetched: bool = True, backend: str = "auto",
             strategy: str = "auto", spec=None,
             distinct_slots: Optional[int] = None,
-            reverse_ranks: bool = False) -> AtomicResult:
+            reverse_ranks: bool = False,
+            collect_stats: bool = False) -> AtomicResult:
     """Execute typed RMW op batches against a table, cost-model-routed.
 
     Args:
@@ -348,6 +419,12 @@ def execute(table: Union[AtomicTable, Array],
         rank order (the arrival order reversed at every exchange level).
         Combined with locally reversed batches this realizes a globally
         reversed op stream, the second pass of the SWP+revert BFS scheme.
+      collect_stats: True additionally computes the batch's device-side
+        :class:`~repro.atomics.stats.ContentionStats` inside the combine
+        pass (occupancy, distinct/max/histogram, top-k hot slots; sharded
+        tier adds per-exchange-level combining efficiency) — returned as
+        ``result.stats``.  Results are bit-identical either way; with the
+        default False the stats code does not run at all.
 
     Returns:
       :class:`AtomicResult`, bit-identical to the serialized oracle.
@@ -355,23 +432,25 @@ def execute(table: Union[AtomicTable, Array],
     if not isinstance(table, AtomicTable):
         table = AtomicTable(table)
     if isinstance(ops, AtomicOp):
-        table, fetched, success = _execute_one(
+        table, fetched, success, stats = _execute_one(
             table, ops, need_fetched=need_fetched, backend=backend,
             strategy=strategy, spec=spec, distinct_slots=distinct_slots,
-            reverse_ranks=reverse_ranks)
-        return AtomicResult(table, fetched, success)
+            reverse_ranks=reverse_ranks, collect_stats=collect_stats)
+        return AtomicResult(table, fetched, success, stats)
     ops = tuple(ops)
     if not ops:
         raise ValueError("ops is empty")
-    fetched_l, success_l = [], []
+    fetched_l, success_l, stats_l = [], [], []
     for op in ops:
-        table, fetched, success = _execute_one(
+        table, fetched, success, stats = _execute_one(
             table, op, need_fetched=need_fetched, backend=backend,
             strategy=strategy, spec=spec, distinct_slots=distinct_slots,
-            reverse_ranks=reverse_ranks)
+            reverse_ranks=reverse_ranks, collect_stats=collect_stats)
         fetched_l.append(fetched)
         success_l.append(success)
-    return AtomicResult(table, tuple(fetched_l), tuple(success_l))
+        stats_l.append(stats)
+    return AtomicResult(table, tuple(fetched_l), tuple(success_l),
+                        tuple(stats_l) if collect_stats else None)
 
 
 def arrival_rank(keys: Array, num_keys: Optional[int] = None, *,

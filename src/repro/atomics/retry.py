@@ -47,7 +47,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import telemetry
+from repro.telemetry import core as _tcore
 from repro.atomics import contracts as _contracts
+from repro.atomics import stats as _cstats
 from repro.atomics.ops import OP_KINDS, AtomicOp, Cas
 from repro.atomics.table import AtomicTable
 
@@ -156,6 +158,13 @@ class RetryResult(NamedTuple):
     resolved within the round budget; ``rounds[i]`` how many attempts it
     took (the per-op contention observable; 1 = first try); ``pending``
     the original positions still unresolved (empty on full convergence).
+
+    ``stats`` is the round-0 device-side
+    :class:`~repro.atomics.stats.ContentionStats` when the loop collected
+    one (``collect_stats=True``, or None-auto with a tuning controller
+    running), else None.  Round 0 is the full batch — the round whose
+    contention spectrum characterizes the workload; later rounds only
+    re-issue the losers.
     """
 
     table: AtomicTable
@@ -164,6 +173,7 @@ class RetryResult(NamedTuple):
     rounds: np.ndarray
     n_rounds: int
     pending: np.ndarray
+    stats: Any = None
 
 
 # ---------------------------------------------------------------------------
@@ -181,7 +191,7 @@ def _norm_tuple(axes) -> Tuple[str, ...]:
 
 def _sharded_round_fn(mesh, axis: Tuple[str, ...], rep: Tuple[str, ...],
                       kind: str, backend: str, strategy: str, spec,
-                      distinct_slots):
+                      distinct_slots, collect_stats: bool = False):
     """Build (and cache) the jitted shard_map executing ONE retry round on
     a mesh-sharded table: ops scattered contiguously over device ranks, so
     the device-rank arrival order re-creates the round's batch order."""
@@ -190,13 +200,14 @@ def _sharded_round_fn(mesh, axis: Tuple[str, ...], rep: Tuple[str, ...],
     # swaps the live spec: the body bakes its strategy selection at trace
     # time, so a stale entry would keep dispatching the old choice
     key = (mesh, axis, rep, kind, backend, strategy, id(spec),
-           distinct_slots, rmw_engine._SPEC_EPOCH)
+           distinct_slots, collect_stats, rmw_engine._SPEC_EPOCH)
     fn = _SHARDED_ROUND_CACHE.get(key)
     if fn is not None:
         return fn
     from jax.sharding import PartitionSpec as P
 
     from repro.atomics.execute import execute
+    from repro.atomics.stats import ContentionStats
     from repro.sharding import shard_map_compat
 
     tab_spec, op_spec = P(axis), P(rep + axis)
@@ -210,19 +221,29 @@ def _sharded_round_fn(mesh, axis: Tuple[str, ...], rep: Tuple[str, ...],
             op = OP_KINDS[kind](i, v)
         res = execute(tbl, op, need_fetched=True, backend=backend,
                       strategy=strategy, spec=spec,
-                      distinct_slots=distinct_slots)
+                      distinct_slots=distinct_slots,
+                      collect_stats=collect_stats)
+        if collect_stats:
+            return res.table.data, res.fetched, res.success, res.stats
         return res.table.data, res.fetched, res.success
 
+    out_specs = (tab_spec, op_spec, op_spec)
+    if collect_stats:
+        # stats leaves are already psum'd over every mesh axis inside the
+        # exchange — replicated outputs, P() per ContentionStats field
+        out_specs = out_specs + (
+            ContentionStats(*([P()] * len(ContentionStats._fields))),)
     fn = jax.jit(shard_map_compat(body, mesh,
                                   (tab_spec, op_spec, op_spec, op_spec),
-                                  (tab_spec, op_spec, op_spec)))
+                                  out_specs))
     _SHARDED_ROUND_CACHE[key] = fn
     return fn
 
 
 def _exec_round_sharded(table: AtomicTable, kind: str, idx: np.ndarray,
                         vals: np.ndarray, exp: Optional[np.ndarray], *,
-                        backend: str, strategy: str, spec, distinct_slots):
+                        backend: str, strategy: str, spec, distinct_slots,
+                        collect_stats: bool = False):
     from repro import sharding as shardlib
     mesh = getattr(getattr(table.data, "sharding", None), "mesh", None)
     if mesh is None:
@@ -252,7 +273,7 @@ def _exec_round_sharded(table: AtomicTable, kind: str, idx: np.ndarray,
     if exp is not None:
         exp_p[:k] = exp
     fn = _sharded_round_fn(mesh, axis, rep, kind, backend, strategy, spec,
-                           distinct_slots)
+                           distinct_slots, collect_stats)
     from jax.sharding import NamedSharding, PartitionSpec as P
     op_sh = NamedSharding(mesh, P(rep + axis))
     args = [jax.device_put(jnp.asarray(a), op_sh)
@@ -281,10 +302,14 @@ def _exec_round_sharded(table: AtomicTable, kind: str, idx: np.ndarray,
                     info.update(strategy=strategy)
             except Exception:  # noqa: BLE001 — never break the round
                 pass
+    stats = None
     with telemetry.annotation("atomics.retry.exchange"):
-        tab, fetched, success = fn(table.data, *args)
+        if collect_stats:
+            tab, fetched, success, stats = fn(table.data, *args)
+        else:
+            tab, fetched, success = fn(table.data, *args)
     return (table.with_data(tab), np.asarray(fetched)[:k],
-            np.asarray(success)[:k].astype(bool), info)
+            np.asarray(success)[:k].astype(bool), info, stats)
 
 
 def _rep_size(mesh, rep: Tuple[str, ...]) -> int:
@@ -293,11 +318,13 @@ def _rep_size(mesh, rep: Tuple[str, ...]) -> int:
 
 def _exec_round(table: AtomicTable, kind: str, idx: np.ndarray,
                 vals: np.ndarray, exp: Optional[np.ndarray], *,
-                backend: str, strategy: str, spec, distinct_slots):
+                backend: str, strategy: str, spec, distinct_slots,
+                collect_stats: bool = False):
     if table.is_sharded:
         return _exec_round_sharded(table, kind, idx, vals, exp,
                                    backend=backend, strategy=strategy,
-                                   spec=spec, distinct_slots=distinct_slots)
+                                   spec=spec, distinct_slots=distinct_slots,
+                                   collect_stats=collect_stats)
     from repro.atomics.execute import execute
     if kind == "cas":
         op = Cas(jnp.asarray(idx), jnp.asarray(vals),
@@ -321,14 +348,22 @@ def _exec_round(table: AtomicTable, kind: str, idx: np.ndarray,
                 info.update(backend=backend)
         except Exception:  # noqa: BLE001 — never break the round
             pass
-    res = execute(table, op, need_fetched=True, backend=backend, spec=spec)
+    res = execute(table, op, need_fetched=True, backend=backend, spec=spec,
+                  collect_stats=collect_stats)
     return (res.table, np.asarray(res.fetched),
-            np.asarray(res.success).astype(bool), info)
+            np.asarray(res.success).astype(bool), info, res.stats)
 
 
 # ---------------------------------------------------------------------------
 # The combinator
 # ---------------------------------------------------------------------------
+
+def _host_distinct(x: np.ndarray) -> int:
+    """Round-0 host-side distinct-slot count — the pre-observatory
+    estimator observation, kept as the fallback when device-side stats are
+    off (and monkeypatchable in tests to prove the hot path skips it)."""
+    return int(np.unique(x).size)
+
 
 def _active_estimator():
     """The running `repro.tuning` controller's contention estimator, or
@@ -347,6 +382,7 @@ def execute_until(table: Union[AtomicTable, Array],
                   policy: Union[str, RetryPolicy] = "immediate",
                   backend: str = "auto", strategy: str = "auto",
                   spec=None, distinct_slots: Optional[int] = None,
+                  collect_stats: Optional[bool] = None,
                   sleep_fn: Callable[[float], None] = time.sleep
                   ) -> RetryResult:
     """Drive a batch of CAS loops to convergence in ``<= max_rounds`` rounds.
@@ -381,6 +417,14 @@ def execute_until(table: Union[AtomicTable, Array],
     slots + CAS round-histogram winners).  Passing an explicit value
     overrides the estimator; without a controller, None means no hint —
     exactly the pre-tuning behavior.
+
+    ``collect_stats`` controls the round-0 device-side contention pass
+    (:class:`~repro.atomics.stats.ContentionStats`, returned in
+    ``result.stats``): True forces it, False forces it off, and the
+    default None enables it exactly when an estimator is active — the
+    estimator then reads ``distinct_slots`` straight from the combine
+    pass instead of the host ``np.unique`` fallback, which is skipped
+    entirely.  Results are bit-identical in every mode.
     """
     pol = _resolve_policy(policy)
     if max_rounds < 1:
@@ -414,6 +458,11 @@ def execute_until(table: Union[AtomicTable, Array],
                            int(table.data.shape[0]), n)
         if distinct_slots is None and table.is_sharded:
             distinct_slots = est.hint(est_key)
+    # device-side stats default: on exactly when an estimator consumes
+    # them (the ROADMAP follow-on: feed the EWMA from on-device counts)
+    use_device = collect_stats if collect_stats is not None \
+        else est is not None
+    stats0 = None
     tbl_dtype = np.asarray(jnp.zeros((), table.data.dtype)).dtype
     slots = np.asarray(op0.indices, np.int32).copy()
     values = np.asarray(op0.values, tbl_dtype).copy()
@@ -465,21 +514,32 @@ def execute_until(table: Union[AtomicTable, Array],
                     expected[pending] = observed[pending]
         k = max(1, min(pol.batch_size(len(pending), rnd), len(pending)))
         issue, defer = pending[:k], pending[k:]
-        if rnd == 0 and (est is not None or telemetry.enabled()):
-            # the combine pass's collision count, exactly: the slots are
-            # host numpy already, so the round-0 distinct-slot count is
-            # one np.unique away — the estimator's primary observation
-            distinct_obs = int(np.unique(slots[issue]).size)
+        collect_now = use_device and rnd == 0
+        if rnd == 0 and not use_device and (est is not None
+                                            or telemetry.enabled()):
+            # host fallback for the combine pass's collision count: the
+            # slots are host numpy already, so the round-0 distinct-slot
+            # count is one np.unique away — skipped entirely when the
+            # device pass supersedes it or nothing consumes it
+            distinct_obs = _host_distinct(slots[issue])
             if est is not None:
                 est.update(est_key, distinct_obs)
         else:
             distinct_obs = None
         t0 = time.perf_counter()
-        table, fetched, ok, info = _exec_round(
+        table, fetched, ok, info, st = _exec_round(
             table, kind, slots[issue], values[issue],
             expected[issue] if is_cas else None,
             backend=backend, strategy=strategy, spec=spec,
-            distinct_slots=distinct_slots)
+            distinct_slots=distinct_slots, collect_stats=collect_now)
+        if st is not None:
+            stats0 = st
+            # the round's fetched/success reads just blocked, so the stats
+            # leaves are materialized — reading distinct here is one D2H
+            # scalar copy, not a sync
+            distinct_obs = int(np.asarray(st.distinct_slots))
+            if est is not None:
+                est.update(est_key, distinct_obs, source="device")
         if info is not None:
             if distinct_obs is not None:
                 info["distinct_observed"] = distinct_obs
@@ -519,6 +579,14 @@ def execute_until(table: Union[AtomicTable, Array],
                          resolved=int(success.sum()),
                          unresolved=int(len(pending)),
                          attempts=int(rounds.sum()), round_histogram=hist)
+        if stats0 is not None and (table.is_sharded or not _tcore._sync):
+            # the loop's own sync boundary; the local-tier + sync-mode
+            # combination is the one case execute()'s eager sync branch
+            # already emitted, so it is excluded to keep one event per
+            # collected batch
+            telemetry.record_event(_cstats.stats_to_fields(
+                stats0, tier="sharded" if table.is_sharded else "local",
+                op=kind, n=n, m=int(table.data.shape[0]), round=0))
     return RetryResult(table=table, fetched=observed, success=success,
                        rounds=rounds, n_rounds=n_rounds,
-                       pending=np.sort(pending))
+                       pending=np.sort(pending), stats=stats0)

@@ -1,0 +1,157 @@
+"""Device-side contention statistics for the RMW tiers (PR 10).
+
+The paper's central claim is that atomic cost is governed by the *state* of
+the accessed line — how many writers collide on it — not by the primitive's
+consensus number.  This module is the observable for that state: a small
+``ContentionStats`` pytree of device arrays computed *inside* the existing
+combine passes (the onehot backend's bincount scatter locally, the
+``psum_scatter`` owner reduction on the sharded tier), returned alongside
+results when callers opt in with ``collect_stats=``.
+
+Everything here is pure jnp on already-materialized occupancy vectors, so it
+traces cleanly inside ``jit`` / ``shard_map`` (PR-7 jit discipline: stats
+stay device arrays; hosts only look at them at sync boundaries).
+
+Layout:
+
+* ``n_ops``          — () int32, in-range ops in the batch
+* ``distinct_slots`` — () int32, slots touched at least once
+* ``max_occupancy``  — () int32, writers on the hottest slot
+* ``occupancy_hist`` — (HIST_BINS,) int32, occupied slots bucketed by
+  ``floor(log2(occupancy))`` (bucket 0 = exactly 1 writer, bucket 1 = 2-3,
+  bucket 2 = 4-7, ...; the top bucket absorbs the tail)
+* ``topk_slots`` / ``topk_counts`` — (TOPK,) int32, hottest slot ids (global
+  ids on the sharded tier) and their occupancy; ``-1`` slot id where fewer
+  than TOPK slots are occupied
+* ``level_ops_in`` / ``level_ops_out`` — (L,) int32, sharded tier only: ops
+  entering each exchange level vs. combined representatives leaving it — the
+  measured two-phase dedup factor.  ``L = 0`` on the local tier.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "HIST_BINS", "TOPK", "ContentionStats", "occupancy_hist", "topk_hot",
+    "stats_from_occupancy", "stats_to_fields",
+]
+
+HIST_BINS = 16
+TOPK = 8
+
+
+class ContentionStats(NamedTuple):
+    """Per-batch contention observables; every field is a device array."""
+
+    n_ops: Any
+    distinct_slots: Any
+    max_occupancy: Any
+    occupancy_hist: Any
+    topk_slots: Any
+    topk_counts: Any
+    level_ops_in: Any
+    level_ops_out: Any
+
+
+def occupancy_hist(occ: Any) -> Any:
+    """(HIST_BINS,) histogram of occupied slots by log2(occupancy) bucket.
+
+    A (HIST_BINS, m) comparison matrix instead of a scatter: XLA CPU
+    scatters serialize per element (~150ns each), while the dense mask sum
+    vectorizes — ~2.3x cheaper at m=1024, and scatter-free inside the
+    combine pass it rides in.
+    """
+    occ = occ.astype(jnp.int32)
+    bucket = jnp.log2(jnp.maximum(occ, 1).astype(jnp.float32)).astype(jnp.int32)
+    bucket = jnp.clip(bucket, 0, HIST_BINS - 1)
+    # Unoccupied slots route to a sacrificial bin value that matches nothing.
+    bucket = jnp.where(occ > 0, bucket, HIST_BINS)
+    bins = jnp.arange(HIST_BINS, dtype=jnp.int32)
+    return (bucket[None, :] == bins[:, None]).sum(axis=1, dtype=jnp.int32)
+
+
+def topk_hot(occ: Any, slot_ids: Optional[Any] = None) -> Any:
+    """Hottest TOPK slots of an occupancy vector.
+
+    Returns ``(slots, counts)``: ``slots`` are positions in ``occ`` (or
+    gathered from ``slot_ids`` when the vector carries non-trivial ids, e.g.
+    owner-shard-local rows mapped to global slot numbers), ``-1`` where the
+    corresponding count is zero.  TOPK unrolled argmax passes instead of
+    ``lax.top_k`` — top_k sorts the whole vector (~4x the cost on CPU at
+    m=1024) where eight masked reductions suffice.
+    """
+    occ = occ.astype(jnp.int32)
+    if slot_ids is None:
+        slot_ids = jnp.arange(occ.shape[0], dtype=jnp.int32)
+    slot_ids = slot_ids.astype(jnp.int32)
+    cur = occ
+    slots, counts = [], []
+    for _ in range(TOPK):
+        p = jnp.argmax(cur)
+        c = jnp.maximum(cur[p], 0)
+        slots.append(jnp.where(c > 0, slot_ids[p], -1))
+        counts.append(c)
+        cur = cur.at[p].set(-1)
+    return jnp.stack(slots), jnp.stack(counts).astype(jnp.int32)
+
+
+def _level_array(levels: Optional[Sequence[Any]]) -> Any:
+    if not levels:
+        return jnp.zeros((0,), jnp.int32)
+    return jnp.stack([jnp.asarray(v, jnp.int32) for v in levels])
+
+
+def stats_from_occupancy(
+    occ: Any,
+    n_ops: Any,
+    *,
+    slot_ids: Optional[Any] = None,
+    level_ops_in: Optional[Sequence[Any]] = None,
+    level_ops_out: Optional[Sequence[Any]] = None,
+) -> ContentionStats:
+    """Build ``ContentionStats`` from a per-slot occupancy vector.
+
+    ``occ`` is the full occupancy (one entry per table slot — locally the
+    whole table, on the sharded tier the owner shard's rows with ``slot_ids``
+    carrying global slot numbers).  Cross-device reductions are the caller's
+    job; this function is purely local arithmetic so it composes with
+    ``psum``/``pmax`` either side.
+    """
+    occ = occ.astype(jnp.int32)
+    slots, counts = topk_hot(occ, slot_ids)
+    return ContentionStats(
+        n_ops=jnp.asarray(n_ops, jnp.int32),
+        distinct_slots=(occ > 0).sum(dtype=jnp.int32),
+        max_occupancy=jnp.max(occ).astype(jnp.int32),
+        occupancy_hist=occupancy_hist(occ),
+        topk_slots=slots,
+        topk_counts=counts,
+        level_ops_in=_level_array(level_ops_in),
+        level_ops_out=_level_array(level_ops_out),
+    )
+
+
+def stats_to_fields(stats: ContentionStats, **extra: Any) -> Dict[str, Any]:
+    """Convert device stats to a flat host-side telemetry event payload.
+
+    Forces a device sync — only call at sync boundaries (eager sync mode or
+    after the retry loop's host round trip), never under trace.
+    """
+    fields: Dict[str, Any] = {
+        "event": "contention.stats",
+        "n_ops": int(np.asarray(stats.n_ops)),
+        "distinct_slots": int(np.asarray(stats.distinct_slots)),
+        "max_occupancy": int(np.asarray(stats.max_occupancy)),
+        "occupancy_hist": np.asarray(stats.occupancy_hist).tolist(),
+        "topk_slots": np.asarray(stats.topk_slots).tolist(),
+        "topk_counts": np.asarray(stats.topk_counts).tolist(),
+        "level_ops_in": np.asarray(stats.level_ops_in).tolist(),
+        "level_ops_out": np.asarray(stats.level_ops_out).tolist(),
+    }
+    fields.update(extra)
+    return fields

@@ -208,6 +208,20 @@ def _tables_only(table: Array, indices: Array, values: Array, op: str,
                      jnp.zeros((n,), bool))
 
 
+def slot_occupancy(indices: Array, m: int) -> Array:
+    """(m,) int32 per-slot writer counts for a batch of slot indices.
+
+    This *is* the onehot backend's bincount pass (`_tables_only` FAA with
+    unit values) exposed for the contention observatory (PR 10) instead of
+    recomputed: out-of-range-high indices drop, negatives are remapped past
+    the table so they drop too — exactly the occupancy the combine passes
+    act on.  Pure jnp; traces inside jit/shard_map.
+    """
+    ones = jnp.ones(indices.shape, jnp.int32)
+    return _tables_only(jnp.zeros((m,), jnp.int32), indices, ones,
+                        "faa", None).table
+
+
 @partial(jax.jit, static_argnames=("num_keys", "block"))
 def _arrival_rank_sortfree(keys: Array, num_keys: int, *,
                            block: int = DEFAULT_ONEHOT_BLOCK) -> Array:

@@ -290,6 +290,65 @@ def _pop(stage: _Stage, bases_recv: Array, op: str, expected
 
 
 # ---------------------------------------------------------------------------
+# Contention observatory (PR 10): stats from inside the combine passes
+# ---------------------------------------------------------------------------
+
+def _stage_level_counts(stages, m_global: int, all_axes: Tuple[str, ...]):
+    """Per-exchange-level combining efficiency from the stage bookkeeping.
+
+    Each `_Stage` already materializes the collision structure of its
+    pre-combine (`comb.seg_start` marks group representatives, `comb.sidx`
+    flags validity) — so ops-in / ops-out per level are free reductions over
+    arrays the protocol computed anyway.  Every logical op lives on exactly
+    one device at any level, so a psum over all participating axes counts
+    each exactly once.
+    """
+    level_in, level_out = [], []
+    for st_ in stages:
+        v = st_.comb.sidx < m_global
+        level_in.append(jax.lax.psum(v.sum(dtype=jnp.int32), all_axes))
+        level_out.append(jax.lax.psum(
+            (st_.comb.seg_start & v).sum(dtype=jnp.int32), all_axes))
+    return level_in, level_out
+
+
+def _contention_stats(gidx: Array, *, m_loc: int, m_global: int,
+                      shard_axes: Tuple[str, ...],
+                      rep_axes: Tuple[str, ...], level_in, level_out):
+    """Mesh-global `ContentionStats` from per-device global slot ids.
+
+    The occupancy reduction is the dense strategy's own psum_scatter pass
+    run on unit values: each owner shard ends up holding the exact writer
+    count for its rows, and the scalar observables reduce from there
+    (replicated across the mesh, so shard_map out_specs use `P()`).
+    """
+    from repro.atomics import stats as _cstats
+
+    occ = jnp.zeros((m_global + 1,), jnp.int32).at[gidx].add(1)[:-1]
+    occ_own = jax.lax.psum_scatter(occ, shard_axes, scatter_dimension=0,
+                                   tiled=True)
+    if rep_axes:
+        occ_own = jax.lax.psum(occ_own, rep_axes)
+    all_axes = shard_axes + rep_axes
+    n_ops = jax.lax.psum((gidx < m_global).sum(dtype=jnp.int32), all_axes)
+    distinct = jax.lax.psum((occ_own > 0).sum(dtype=jnp.int32), shard_axes)
+    max_occ = jax.lax.pmax(jnp.max(occ_own).astype(jnp.int32), shard_axes)
+    hist = jax.lax.psum(_cstats.occupancy_hist(occ_own), shard_axes)
+    # top-k: local candidates with global slot ids, re-ranked after a gather
+    shard = jax.lax.axis_index(shard_axes).astype(jnp.int32)
+    ids = shard * m_loc + jnp.arange(m_loc, dtype=jnp.int32)
+    slots_l, counts_l = _cstats.topk_hot(occ_own, ids)
+    slots_g = jax.lax.all_gather(slots_l, shard_axes, tiled=True)
+    counts_g = jax.lax.all_gather(counts_l, shard_axes, tiled=True)
+    slots_k, counts_k = _cstats.topk_hot(counts_g, slots_g)
+    return _cstats.ContentionStats(
+        n_ops=n_ops, distinct_slots=distinct, max_occupancy=max_occ,
+        occupancy_hist=hist, topk_slots=slots_k, topk_counts=counts_k,
+        level_ops_in=_cstats._level_array(level_in),
+        level_ops_out=_cstats._level_array(level_out))
+
+
+# ---------------------------------------------------------------------------
 # The distributed executor
 # ---------------------------------------------------------------------------
 
@@ -301,7 +360,8 @@ def execute_sharded(table: Array, indices: Array, values: Array, op: str,
                     axis_tiers: Optional[Sequence[Tier]] = None,
                     need_fetched: bool = True,
                     distinct_slots: Optional[int] = None,
-                    reverse_ranks: bool = False) -> RmwResult:
+                    reverse_ranks: bool = False,
+                    collect_stats: bool = False):
     """Execute an RMW batch against a mesh-sharded table (inside shard_map).
 
     The distributed tier of the unified front-end — call it through
@@ -337,6 +397,13 @@ def execute_sharded(table: Array, indices: Array, values: Array, op: str,
     `rmw_serialized` on the device-rank-ordered concatenated batch (see
     module docstring), with `need_fetched=False` skipping the entire return
     path (fetched/success are zero placeholders).
+
+    ``collect_stats=True`` (PR 10) additionally returns mesh-global
+    :class:`repro.atomics.stats.ContentionStats` — the return becomes
+    ``(RmwResult, ContentionStats)``.  Stats are read out of the combine
+    passes' own bookkeeping (occupancy via the dense psum_scatter reduction,
+    per-level efficiency from each `_Stage`'s seg_start flags), never change
+    results, and stay device arrays (replicated: use `P()` out_specs).
     """
     if op not in OPS:
         raise ValueError(f"unknown op {op!r}")
@@ -367,7 +434,7 @@ def execute_sharded(table: Array, indices: Array, values: Array, op: str,
             table, indices, values, expected, shard_axes=shard_axes,
             rep_axes=rep_axes, n_shards=n_shards, n_rep=n_rep, m_loc=m_loc,
             m_global=m_global, need_fetched=need_fetched, spec=spec,
-            reverse=reverse_ranks)
+            reverse=reverse_ranks, collect_stats=collect_stats)
 
     if strategy == "auto":
         strategy = select_exchange(
@@ -394,7 +461,12 @@ def execute_sharded(table: Array, indices: Array, values: Array, op: str,
                                      tiled=True)
         if rep_axes:
             delta = jax.lax.psum(delta, rep_axes)
-        return RmwResult(table + delta, zero_f, zero_s)
+        result = RmwResult(table + delta, zero_f, zero_s)
+        if collect_stats:  # dense has no exchange levels: L = 0
+            return result, _contention_stats(
+                gidx, m_loc=m_loc, m_global=m_global, shard_axes=shard_axes,
+                rep_axes=rep_axes, level_in=(), level_out=())
+        return result
 
     # --- build the exchange pipeline (innermost level first) --------------
     stages = []
@@ -461,14 +533,24 @@ def execute_sharded(table: Array, indices: Array, values: Array, op: str,
         # only replica rank 0 received real ops; broadcast its shard update
         new_table = table + jax.lax.psum(new_table - table, rep_axes)
 
+    stats = None
+    if collect_stats:
+        level_in, level_out = _stage_level_counts(
+            stages, m_global, shard_axes + rep_axes)
+        stats = _contention_stats(
+            gidx, m_loc=m_loc, m_global=m_global, shard_axes=shard_axes,
+            rep_axes=rep_axes, level_in=level_in, level_out=level_out)
+
     if not need_fetched:
-        return RmwResult(new_table, zero_f, zero_s)
+        result = RmwResult(new_table, zero_f, zero_s)
+        return (result, stats) if collect_stats else result
 
     # --- unwind: bases flow back down the tree ----------------------------
     bases = res.fetched.astype(values.dtype)
     for stage in reversed(stages):
         bases, success = _pop(stage, bases, op, expected)
-    return RmwResult(new_table, bases, success)
+    result = RmwResult(new_table, bases, success)
+    return (result, stats) if collect_stats else result
 
 
 def _push_naive(gidx, vals, op, expected, axis, n_shards, m_loc, m_global,
@@ -562,7 +644,8 @@ def _execute_cas_perop(table: Array, indices: Array, values: Array,
                        expected: Array, *, shard_axes: Tuple[str, ...],
                        rep_axes: Tuple[str, ...], n_shards: int, n_rep: int,
                        m_loc: int, m_global: int, need_fetched: bool,
-                       spec, reverse: bool = False) -> RmwResult:
+                       spec, reverse: bool = False,
+                       collect_stats: bool = False):
     """Cross-shard CAS with per-op expected values (ROADMAP closure).
 
     Per-op expected CAS chains do not compose associatively (the combined
@@ -605,10 +688,23 @@ def _execute_cas_perop(table: Array, indices: Array, values: Array,
     if rep_axes:                    # broadcast replica rank 0's update
         new_table = table + jax.lax.psum(new_table - table, rep_axes)
 
+    stats = None
+    if collect_stats:
+        # un-combinable by construction: every level moves each op raw, so
+        # ops-in == ops-out at every level (the measured "wasted work").
+        all_axes = shard_axes + rep_axes
+        n_valid = jax.lax.psum((gidx < m_global).sum(dtype=jnp.int32),
+                               all_axes)
+        levels = [n_valid] * len(stages)
+        stats = _contention_stats(
+            gidx, m_loc=m_loc, m_global=m_global, shard_axes=shard_axes,
+            rep_axes=rep_axes, level_in=levels, level_out=levels)
+
     zero_f = jnp.zeros((n,), values.dtype)
     zero_s = jnp.zeros((n,), bool)
     if not need_fetched:
-        return RmwResult(new_table, zero_f, zero_s)
+        result = RmwResult(new_table, zero_f, zero_s)
+        return (result, stats) if collect_stats else result
 
     bases = res.fetched.astype(values.dtype)
     for axis, n_dest, cap, slotpos in reversed(stages):
@@ -620,7 +716,8 @@ def _execute_cas_perop(table: Array, indices: Array, values: Array,
     valid = gidx < m_global
     fetched = jnp.where(valid, bases, zero_f)
     success = valid & (bases == exp.astype(values.dtype))
-    return RmwResult(new_table, fetched, success)
+    result = RmwResult(new_table, fetched, success)
+    return (result, stats) if collect_stats else result
 
 
 # ---------------------------------------------------------------------------

@@ -138,6 +138,62 @@ def rmw_table(table: jax.Array, indices: jax.Array, values: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# Contention counters kernel (PR 10 observatory)
+# ---------------------------------------------------------------------------
+
+def _slot_count_kernel(idx_ref, count_ref, *, table_tile: int, block: int):
+    """Per-slot occupancy counts via the same one-hot contraction as the RMW.
+
+    The counters output ref accumulates column sums of the one-hot matrix
+    across index blocks — the combine pass's collision counts emitted as a
+    first-class output instead of being discarded after the reduction.
+    """
+    tile_id = pl.program_id(0)
+    blk_id = pl.program_id(1)
+
+    @pl.when(blk_id == 0)
+    def _init():
+        count_ref[...] = jnp.zeros_like(count_ref)
+
+    tile_start = tile_id * table_tile
+    idx = idx_ref[...].astype(jnp.int32)            # (1, block)
+    slots = jax.lax.broadcasted_iota(jnp.int32, (block, table_tile), 1)
+    local = idx.reshape(block, 1) - tile_start
+    one_hot = (local == slots)                      # (block, table_tile)
+    upd = jnp.sum(one_hot.astype(jnp.int32), axis=0).reshape(1, table_tile)
+    count_ref[...] = count_ref[...] + upd
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("m", "table_tile", "block", "interpret"))
+def slot_counts(indices: jax.Array, m: int, *,
+                table_tile: int = DEFAULT_TABLE_TILE,
+                block: int = DEFAULT_BLOCK,
+                interpret: Optional[bool] = None) -> jax.Array:
+    """(m,) int32 occupancy counts for a slot-index batch.
+
+    Same padding contract as `rmw_table`: m % table_tile == 0 and
+    batch % block == 0 (ops.py pads); out-of-range indices match no slot.
+    """
+    nb = indices.shape[0]
+    assert m % table_tile == 0, (m, table_tile)
+    assert nb % block == 0, (nb, block)
+    grid = (m // table_tile, nb // block)
+
+    kernel = functools.partial(_slot_count_kernel, table_tile=table_tile,
+                               block=block)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, block), lambda t, b: (0, b))],
+        out_specs=pl.BlockSpec((1, table_tile), lambda t, b: (0, t)),
+        out_shape=jax.ShapeDtypeStruct((1, m), jnp.int32),
+        interpret=_resolve_interpret(interpret),
+    )(indices.reshape(1, nb))
+    return out.reshape(m)
+
+
+# ---------------------------------------------------------------------------
 # Fetched-value kernel (serialized-order fetch results + uniform-expected CAS)
 # ---------------------------------------------------------------------------
 

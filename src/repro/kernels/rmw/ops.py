@@ -92,3 +92,24 @@ def histogram(indices: Array, num_bins: int, **kw) -> Array:
     """Expert-load histogram — FAA with unit values (MoE routing's counter)."""
     return rmw_apply(jnp.zeros((num_bins,), jnp.float32), indices,
                      jnp.ones(indices.shape, jnp.float32), "faa", **kw)
+
+
+@functools.partial(jax.jit, static_argnames=("m", "table_tile", "block"))
+def slot_occupancy(indices: Array, m: int, *,
+                   table_tile: int = _k.DEFAULT_TABLE_TILE,
+                   block: int = _k.DEFAULT_BLOCK) -> Array:
+    """(m,) int32 exact per-slot occupancy via the counters kernel output ref.
+
+    Integer-exact companion of :func:`histogram` (whose fp32 FAA path would
+    lose counts past 2^24): the contention observatory's occupancy source
+    when the ``pallas`` backend executed the batch.  Same padding/drop
+    contract as :func:`rmw_apply`.
+    """
+    tile = min(table_tile, max(128, ((m + 127) // 128) * 128))
+    m_p = ((m + tile - 1) // tile) * tile
+    idx = indices.astype(jnp.int32)
+    idx = jnp.where((idx < 0) | (idx >= m), jnp.int32(m_p), idx)
+    idx_p = _pad_to(idx, block, jnp.int32(m_p))
+    out = _k.slot_counts(idx_p, m_p, table_tile=tile, block=block,
+                         interpret=not _on_tpu())
+    return out[:m]

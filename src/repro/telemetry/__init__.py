@@ -20,6 +20,10 @@ Event catalogue (the schema table lives in README "Observability"):
                       resolved counts, strategy, predicted_s, measured_s
 ``atomics.retry.done``   end of an `execute_until` call: round-count
                       histogram (the contention signal), unresolved count
+``contention.stats``  one per ``collect_stats`` batch at a sync boundary:
+                      n_ops, distinct_slots, max_occupancy, log2-bucketed
+                      occupancy_hist, topk_slots/topk_counts, per-exchange-
+                      level level_ops_in/level_ops_out (sharded tier)
 ``atomics.reshard.migrate``  one per table migration: path chosen,
                       predicted_s per path, measured_s
 ``recovery.fault``    one per absorbed/raised failure: site, error type,
@@ -54,12 +58,14 @@ from repro.telemetry.core import (Counters, JsonlWriter, RingBuffer, Sink,
                                   enable, enable_from_env, enabled,
                                   flush_ring, read_jsonl, record,
                                   record_event, remove_sink, ring_events,
-                                  sinks, span, sync_enabled, TELEMETRY_ENV)
+                                  sinks, span, sync_enabled, telemetry_dir,
+                                  TELEMETRY_DIR_ENV, TELEMETRY_ENV)
 
 __all__ = [
     "Counters", "JsonlWriter", "RingBuffer", "Sink", "Span",
     "add_sink", "annotation", "annotations_enabled", "capture", "disable",
     "enable", "enable_from_env", "enabled", "flush_ring", "read_jsonl",
     "record", "record_event", "remove_sink", "ring_events", "sinks",
-    "span", "sync_enabled", "TELEMETRY_ENV",
+    "span", "sync_enabled", "telemetry_dir",
+    "TELEMETRY_DIR_ENV", "TELEMETRY_ENV",
 ]

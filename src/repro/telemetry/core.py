@@ -381,12 +381,30 @@ def annotation(name: str):
 # `recovery.fault` event.
 # ---------------------------------------------------------------------------
 
-#: default JSONL path the ring is flushed to (cwd); override with
+#: env var naming the directory run artifacts (ring flushes) land in
+TELEMETRY_DIR_ENV = "REPRO_TELEMETRY_DIR"
+
+#: default ring-flush filename; lands under `telemetry_dir()` (it used to
+#: land bare in the CWD, strewing ``repro_telemetry_ring.jsonl`` wherever
+#: the process happened to run); override the full path with
 #: ``REPRO_TELEMETRY=ring:/path/to/flush.jsonl``
 RING_FLUSH_DEFAULT = "repro_telemetry_ring.jsonl"
 
 _ring_flush_path: Optional[str] = None   # set by enable_from_env("ring[:p]")
 _atexit_registered = False
+
+
+def telemetry_dir() -> str:
+    """The run's telemetry artifact directory: ``REPRO_TELEMETRY_DIR`` when
+    set, else ``artifacts/telemetry`` under the working directory.  Not
+    created until something is written into it."""
+    return os.environ.get(TELEMETRY_DIR_ENV, "").strip() or \
+        os.path.join("artifacts", "telemetry")
+
+
+def _default_flush_target() -> str:
+    return _ring_flush_path or os.path.join(telemetry_dir(),
+                                            RING_FLUSH_DEFAULT)
 
 
 def ring_events() -> List[Dict[str, Any]]:
@@ -401,15 +419,18 @@ def ring_events() -> List[Dict[str, Any]]:
 def flush_ring(path: Optional[str] = None) -> int:
     """Write the current ring snapshot to ``path`` (default: the
     ``ring:<path>`` target from ``REPRO_TELEMETRY``, else
-    ``RING_FLUSH_DEFAULT`` in the working directory) as JSONL readable by
+    ``RING_FLUSH_DEFAULT`` under `telemetry_dir`) as JSONL readable by
     `read_jsonl`.  Returns the number of events written; 0 (and no file
     touched) when no ring sink is installed or the ring is empty.  Never
     raises — this runs on crash paths."""
     evs = ring_events()
     if not evs:
         return 0
-    target = path or _ring_flush_path or RING_FLUSH_DEFAULT
+    target = path or _default_flush_target()
     try:
+        parent = os.path.dirname(target)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
         with open(target, "w") as f:
             for ev in evs:
                 f.write(json.dumps(
@@ -424,14 +445,14 @@ def _flush_ring_atexit() -> None:
     if n:
         import logging
         logging.getLogger("repro.telemetry").info(
-            "flushed %d ring events to %s", n,
-            _ring_flush_path or RING_FLUSH_DEFAULT)
+            "flushed %d ring events to %s", n, _default_flush_target())
 
 
 def enable_from_env() -> bool:
     """The ``REPRO_TELEMETRY`` hook: ``"ring"`` installs a RingBuffer
     (``"ring:/path.jsonl"`` names where the crash/atexit flush lands —
-    default `RING_FLUSH_DEFAULT`), anything else is treated as a JSONL
+    default `RING_FLUSH_DEFAULT` under `telemetry_dir`), anything else is
+    treated as a JSONL
     output path.  Ring mode registers an atexit flush so the last-N events
     survive a crash.  Returns True when the stream was enabled.  Called by
     `launch.train` so unmodified training invocations can be instrumented

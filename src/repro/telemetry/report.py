@@ -30,12 +30,62 @@ def build_report(events: List[Dict[str, Any]], *, spec=None,
     out: Dict[str, Any] = {"n_events": len(events),
                            "events": counters.summary(),
                            "drift": drift_lib.summarize(stats),
+                           "contention": _contention_rows(events),
                            "analysis": _analysis_rows(events)}
     if fit:
         fitted = drift_lib.fit_spec_update(stats, spec)
         out["spec_update"] = fitted["fields"]
         out["spec_update_skipped"] = fitted["skipped"]
     return out
+
+
+def _contention_rows(events: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
+    """``contention.stats`` events (the `collect_stats=` observatory)
+    aggregated by (tier, op): batch count, mean distinct slots, the worst
+    max-occupancy, the summed log2-bucket occupancy histogram, the hottest
+    slots merged across batches, and per-exchange-level combining
+    efficiency (total ops in vs representatives out)."""
+    agg: Dict[tuple, Dict[str, Any]] = {}
+    for ev in events:
+        if ev.get("event") != "contention.stats":
+            continue
+        key = (str(ev.get("tier")), str(ev.get("op")))
+        a = agg.setdefault(key, {
+            "tier": key[0], "op": key[1], "batches": 0, "n_ops": 0,
+            "distinct_sum": 0, "max_occupancy": 0, "occupancy_hist": [],
+            "hot": {}, "level_ops_in": [], "level_ops_out": []})
+        a["batches"] += 1
+        a["n_ops"] += int(ev.get("n_ops") or 0)
+        a["distinct_sum"] += int(ev.get("distinct_slots") or 0)
+        a["max_occupancy"] = max(a["max_occupancy"],
+                                 int(ev.get("max_occupancy") or 0))
+        hist = [int(h) for h in (ev.get("occupancy_hist") or [])]
+        if len(hist) > len(a["occupancy_hist"]):
+            a["occupancy_hist"] += [0] * (len(hist) - len(a["occupancy_hist"]))
+        for i, h in enumerate(hist):
+            a["occupancy_hist"][i] += h
+        for s, c in zip(ev.get("topk_slots") or [],
+                        ev.get("topk_counts") or []):
+            if int(s) >= 0:
+                a["hot"][int(s)] = max(a["hot"].get(int(s), 0), int(c))
+        for fld in ("level_ops_in", "level_ops_out"):
+            lv = [int(x) for x in (ev.get(fld) or [])]
+            if len(lv) > len(a[fld]):
+                a[fld] += [0] * (len(lv) - len(a[fld]))
+            for i, x in enumerate(lv):
+                a[fld][i] += x
+    rows = []
+    for a in agg.values():
+        hot = sorted(a.pop("hot").items(), key=lambda kv: -kv[1])[:8]
+        a["mean_distinct"] = round(a.pop("distinct_sum")
+                                   / max(1, a["batches"]), 1)
+        a["hot_slots"] = [{"slot": s, "count": c} for s, c in hot]
+        a["level_efficiency"] = [
+            round(o / i, 4) if i else None
+            for i, o in zip(a["level_ops_in"], a["level_ops_out"])]
+        rows.append(a)
+    rows.sort(key=lambda r: (r["tier"], r["op"]))
+    return rows
 
 
 def _analysis_rows(events: List[Dict[str, Any]]) -> List[Dict[str, Any]]:
@@ -83,6 +133,27 @@ def render_text(report: Dict[str, Any]) -> str:
                 f"{_fmt_s(r['mean_measured_s']):>9}")
     else:
         lines.append("  (no (predicted_s, measured_s) pairs in the capture)")
+    cont = report.get("contention") or []
+    lines += ["", "contention (contention.stats events, collect_stats=)"]
+    if cont:
+        lines.append(f"{'tier':<11}{'op':<6}{'batches':>8}{'ops':>8}"
+                     f"{'distinct':>9}{'max_occ':>8}  occupancy 2^k hist"
+                     f" | hot slots | level in->out")
+        for r in cont:
+            hist = r["occupancy_hist"]
+            top = max((i for i, h in enumerate(hist) if h), default=0)
+            hist_s = " ".join(str(h) for h in hist[:top + 1])
+            hot_s = ",".join(f"{h['slot']}x{h['count']}"
+                             for h in r["hot_slots"][:4]) or "-"
+            lvl_s = " ".join(
+                f"{i}->{o}" for i, o in zip(r["level_ops_in"],
+                                            r["level_ops_out"])) or "-"
+            lines.append(
+                f"{r['tier']:<11}{r['op']:<6}{r['batches']:>8}"
+                f"{r['n_ops']:>8}{r['mean_distinct']:>9}"
+                f"{r['max_occupancy']:>8}  [{hist_s}] | {hot_s} | {lvl_s}")
+    else:
+        lines.append("  (no contention.stats events in the capture)")
     lint = report.get("analysis") or []
     lines += ["", "static analysis (analysis.finding events)"]
     if lint:

@@ -57,11 +57,18 @@ class ContentionEstimator:
         self.alpha = float(alpha)
         self._ewma: Dict[SiteKey, float] = {}
         self.n_updates = 0
+        self.n_updates_host = 0
+        self.n_updates_device = 0
 
-    def update(self, key: SiteKey, distinct: int) -> None:
+    def update(self, key: SiteKey, distinct: int, *,
+               source: str = "host") -> None:
         """Fold one observed distinct-slot count into the site's EWMA.
         Counts below 1 carry no signal (nothing was issued) and are
-        ignored."""
+        ignored.  ``source`` tags where the count came from (``"host"``:
+        the retry loop's np.unique; ``"device"``: a ContentionStats
+        ``distinct_slots`` computed inside the combine pass) — same EWMA
+        and site keys either way, the tag only feeds the per-source
+        counters observability reads."""
         d = float(distinct)
         if not math.isfinite(d) or d < 1.0:
             return
@@ -69,6 +76,10 @@ class ContentionEstimator:
         self._ewma[key] = d if prev is None else \
             prev + self.alpha * (d - prev)
         self.n_updates += 1
+        if source == "device":
+            self.n_updates_device += 1
+        else:
+            self.n_updates_host += 1
 
     def hint(self, key: SiteKey) -> Optional[int]:
         """The site's `distinct_slots` hint: the EWMA rounded to the
